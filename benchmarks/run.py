@@ -1,0 +1,143 @@
+"""Benchmark harness — one function per paper table/figure plus framework
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows and dumps the
+full tables to benchmarks/out/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_table5(quick=False):
+    from benchmarks.paper_tables import table5_counters
+
+    widths = (8, 10) if quick else (8, 10, 12, 14, 16)
+    us, rows = _t(table5_counters, widths, 4 if quick else 12, reps=1)
+    worst_f2p = max(r["F2P_LI^2"] for r in rows.values())
+    print(f"table5_counters,{us:.0f},f2p_norm_max={worst_f2p:.3f}")
+    return {str(k): v for k, v in rows.items()}
+
+
+def bench_table6(quick=False):
+    from benchmarks.paper_tables import table6_quant
+
+    out = {}
+    for nbits in (8, 16, 19):
+        us, rows = _t(table6_quant, nbits, reps=1)
+        best = {m: min(r, key=r.get) for m, r in rows.items()}
+        f2p_wins = sum(v.startswith("F2P") for v in best.values())
+        print(f"table6_quant_{nbits}b,{us:.0f},f2p_best_on={f2p_wins}/4")
+        out[str(nbits)] = rows
+    return out
+
+
+def bench_fig1():
+    from benchmarks.paper_tables import fig1_grids
+
+    us, rows = _t(fig1_grids, reps=1)
+    print(f"fig1_grids,{us:.0f},"
+          f"f2p_sr_decades={rows['F2P_SR^2']['range_decades']:.1f}")
+    return rows
+
+
+def bench_kernels(quick=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.f2p import F2PFormat, Flavor
+    from repro.kernels import f2p_quant as K
+
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(256, 1024)).astype(np.float32))
+    us, (codes, scales) = _t(
+        lambda: K.f2p_quantize_pallas(x, fmt, interpret=True), reps=2)
+    print(f"pallas_quantize_256x1024,{us:.0f},interpret=True")
+    us2, _ = _t(lambda: K.f2p_dequantize_pallas(codes, scales, fmt,
+                                                interpret=True), reps=2)
+    print(f"pallas_dequantize_256x1024,{us2:.0f},interpret=True")
+    # jit-embedded tile math (the in-graph path)
+    tm = jax.jit(lambda x: K.quantize_tile_math(x, fmt))
+    us3, _ = _t(lambda: tm(x).block_until_ready(), reps=5)
+    print(f"jit_tile_math_encode_256x1024,{us3:.0f},"
+          f"gbps={x.size*4/us3/1e3:.2f}")
+    return {"quantize_us": us, "dequantize_us": us2, "jit_encode_us": us3}
+
+
+def bench_compression(quick=False):
+    """Gradient-compression quality: relative error + wire-byte savings."""
+    import jax.numpy as jnp
+
+    from repro.optim import CompressionConfig
+    from repro.optim.compress import _roundtrip
+
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 1e-3, size=(1024, 512)).astype(np.float32)
+    ccfg = CompressionConfig()
+    q = np.asarray(_roundtrip(jnp.asarray(g), ccfg.fmt, ccfg.block))
+    rel = np.abs(q - g).mean() / np.abs(g).mean()
+    wire = 1 + 4 / ccfg.block  # bytes/elem vs 4 f32
+    print(f"grad_compress_rel_err,{rel*1e4:.1f},bytes_per_elem={wire:.2f}_vs_4")
+    return {"rel_err": float(rel), "bytes_per_elem": wire}
+
+
+def bench_kv_quality(quick=False):
+    """F2P8 KV cache: decode logits drift on the smoke llama config."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.models import decode_step, init_caches, init_params, prefill
+
+    cfg = smoke_config("llama3_2_3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    outs = {}
+    for q in (False, True):
+        caches = init_caches(cfg, B, 32, quantized_kv=q)
+        _, caches = prefill(params, {"tokens": toks[:, :S]}, cfg, caches)
+        lg, _ = decode_step(params, toks[:, S:], jnp.int32(S), caches, cfg)
+        outs[q] = np.asarray(lg)
+    drift = np.abs(outs[True] - outs[False]).max() / outs[False].std()
+    match = (outs[True].argmax(-1) == outs[False].argmax(-1)).mean()
+    print(f"kv_f2p8_logit_drift,{drift*1000:.1f},top1_match={match:.2f}")
+    return {"drift": float(drift), "top1_match": float(match)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    os.makedirs("benchmarks/out", exist_ok=True)
+    print("name,us_per_call,derived")
+    results = {
+        "table5": bench_table5(args.quick),
+        "table6": bench_table6(args.quick),
+        "fig1": bench_fig1(),
+        "kernels": bench_kernels(args.quick),
+        "compression": bench_compression(args.quick),
+        "kv_quality": bench_kv_quality(args.quick),
+    }
+    with open("benchmarks/out/results.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("# full tables -> benchmarks/out/results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Format-selection study (paper Table VI live, plus in-framework weights).
+
+Quantizes (a) synthetic model-weight stand-ins and (b) weights of a model
+trained by this framework (examples/quickstart.py checkpoint, if present)
+with every 8- and 16-bit format, and prints the normalized MSE table.
+
+    PYTHONPATH=src python examples/quant_study.py
+"""
+import os
+import sys
+
+s = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(s, "..", "src"))
+sys.path.insert(0, os.path.join(s, ".."))
+
+import numpy as np
+
+from benchmarks.paper_tables import formats_for_width, table6_quant
+from repro.core.quantize import quantization_mse
+
+
+def trained_weights():
+    """Pull weights out of the quickstart checkpoint, if one exists."""
+    import glob
+    import json
+
+    ckpt = "/tmp/repro_quickstart_ckpt"
+    steps = sorted(glob.glob(os.path.join(ckpt, "step_*", "index.json")))
+    if not steps:
+        return None
+    from repro.train import checkpoint as CK
+    import jax
+
+    # restore raw arrays without needing the model structure: read index,
+    # dequantizing F2P16-compressed leaves (the big weight matrices)
+    from repro.core.quantize import BlockQuantized, block_dequantize
+    from repro.train.checkpoint import CKPT_FMT
+
+    d = os.path.dirname(steps[-1])
+    with open(steps[-1]) as f:
+        idx = json.load(f)["leaves"]
+    data = np.memmap(os.path.join(d, "data.bin"), dtype=np.uint8, mode="r")
+    chunks = []
+    for name, e in idx.items():
+        if "params" not in name or "embed" in name:
+            continue
+        raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
+        if e["codec"] == "f2p16":
+            codes = np.frombuffer(raw, np.uint16).reshape(e["shape"])
+            sraw = bytes(data[e["scale_offset"]:
+                              e["scale_offset"] + e["scale_nbytes"]])
+            scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
+            arr = block_dequantize(BlockQuantized(
+                codes=codes.astype(np.int64), scales=scales,
+                block=e["block"], fmt=CKPT_FMT))
+            chunks.append(arr.ravel()[:100_000])
+        elif e["codec"] == "raw" and "f" in e["dtype"] and \
+                np.prod(e["shape"]) > 4096:
+            chunks.append(np.frombuffer(raw, e["dtype"]).ravel()[:100_000]
+                          .astype(np.float64))
+    return np.concatenate(chunks) if chunks else None
+
+
+def show(nbits, rows):
+    fmts = list(next(iter(rows.values())).keys())
+    print(f"\n== {nbits}-bit formats, normalized MSE (1.00 = best) ==")
+    print(f"{'model':14s} " + " ".join(f"{f:>10s}" for f in fmts))
+    for m, r in rows.items():
+        print(f"{m:14s} " + " ".join(f"{r[f]:10.2f}" for f in fmts))
+
+
+def main():
+    for nbits in (8, 16):
+        rows = table6_quant(nbits)
+        tw = trained_weights()
+        if tw is not None:
+            fmts = formats_for_width(nbits)
+            mses = {n: quantization_mse(tw, f) for n, f in fmts.items()}
+            lo = min(mses.values())
+            rows["quickstart-lm"] = {k: v / lo for k, v in mses.items()}
+        show(nbits, rows)
+
+
+if __name__ == "__main__":
+    main()

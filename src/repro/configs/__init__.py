@@ -1,0 +1,3 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, full_config,
+                                    smoke_config, input_specs, get_arch,
+                                    shape_is_applicable, canon)

@@ -1,0 +1,97 @@
+"""Architecture registry: --arch <id> resolution + the assigned shape suite.
+
+Every assigned architecture exposes:
+    full()    exact assigned config (dry-run only — never allocated)
+    smoke()   reduced same-family config for CPU tests
+plus `SHAPES`, the four assigned input-shape cells, and `input_specs`
+building ShapeDtypeStruct stand-ins for any (arch, shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+ARCH_IDS = [
+    "minitron_4b",
+    "llama3_2_3b",
+    "minicpm3_4b",
+    "codeqwen1_5_7b",
+    "whisper_large_v3",
+    "internvl2_1b",
+    "llama4_maverick_400b",
+    "llama4_scout_17b",
+    "jamba_1_5_large",
+    "xlstm_125m",
+]
+
+# assigned shape suite: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_arch(arch: str):
+    """Returns the config module for an arch id."""
+    name = canon(arch)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def full_config(arch: str):
+    return get_arch(arch).full()
+
+
+def smoke_config(arch: str):
+    return get_arch(arch).smoke()
+
+
+def shape_is_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic stacks."""
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic mixing (skipped per assignment)"
+    return True, ""
+
+
+def input_specs(cfg, shape_name: str, *, sharding_fn=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    sharding_fn(logical_axes) -> Sharding | None lets the dry-run attach
+    NamedShardings without allocating anything."""
+    seq, gbatch, kind = SHAPES[shape_name]
+
+    def sds(shape, dtype, axes):
+        sh = sharding_fn(axes) if sharding_fn else None
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    text_seq = seq
+    extras = {}
+    if cfg.frontend == "vision":
+        text_seq = seq - cfg.vision_tokens
+        extras["patches"] = sds((gbatch, cfg.vision_tokens, cfg.d_model),
+                                jnp.bfloat16, ("batch", None, None))
+    if cfg.is_encdec:
+        extras["frames"] = sds((gbatch, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16, ("batch", None, None))
+
+    if kind == "train":
+        return dict(tokens=sds((gbatch, text_seq), jnp.int32, ("batch", "seq")),
+                    labels=sds((gbatch, text_seq), jnp.int32, ("batch", "seq")),
+                    **extras)
+    if kind == "prefill":
+        return dict(tokens=sds((gbatch, text_seq), jnp.int32, ("batch", "seq")),
+                    **extras)
+    # decode: one new token against a cache of `seq`
+    return dict(token=sds((gbatch, 1), jnp.int32, ("batch", None)),
+                **extras)

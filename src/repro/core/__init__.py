@@ -1,0 +1,5 @@
+from repro.core.f2p import F2PFormat, Flavor
+from repro.core.formats import (FPFormat, IntFormat, SEADFormat, GridFormat,
+                                fp16, bf16, tf32, named_format)
+from repro.core.quantize import (minmax_quantize, quantization_mse,
+                                 block_quantize, block_dequantize, BlockQuantized)

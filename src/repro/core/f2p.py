@@ -1,0 +1,244 @@
+"""F2P (Floating-Floating Point) number format — Cohen & Einziger 2024.
+
+An N-bit F2P number is laid out MSB->LSB as
+
+    [ sign (optional, 1b) | hyper-exp (H bits) | exponent (E bits) | mantissa (M bits) ]
+
+where E = uint(hyper-exp) is itself *variable* (0 .. 2^H - 1) and the mantissa gets the
+leftover M = N' - H - E bits (N' = payload bits = N - signed).
+
+The exponent vector e (E bits) encodes the *cumulative prefix-free* value
+
+    V(e) = (2^E - 1) + uint(e)                                  (paper Eq. 3)
+
+so vectors of different lengths never collide; V ranges over [0, Vmax-1] with
+
+    Vmax = 2^(2^H) - 1.                                         (paper Eq. 4)
+
+Flavors (paper Table IV) pick the sign of the exponent value and the bias:
+
+    SR:  E = +V,  B = -(Vmax+1)/2,            E_min = 0
+    LR:  E = -V,  B = +(Vmax-1)/2,            E_min = -(Vmax-1)
+    SI:  E = +V,  B = N' - H - 1,             E_min = 0
+    LI:  E = -V,  B = N' - H - 2^H + Vmax-1,  E_min = -(Vmax-1)
+
+and the value rule is FP-identical (paper Eq. 2):
+
+    N(E, M) = 2^(E+B) * (1+M)      if E >  E_min
+            = 2^(E+B+1) * M        if E == E_min   (subnormals)
+
+This module is the *reference* implementation: exact, vectorized numpy, host-side.
+The TPU hot path lives in repro.kernels (branch-free arithmetic encode/decode).
+
+Code <-> value monotonicity: for SR/SI the unsigned payload code is monotone
+*increasing* in value; for LR/LI it is monotone *decreasing*. Both are bijections
+onto the grid (modulo the two codes of value 0 never colliding — subnormal zero
+exists only at one end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+
+import numpy as np
+
+__all__ = ["Flavor", "F2PFormat"]
+
+
+class Flavor(enum.Enum):
+    SR = "sr"  # small reals
+    LR = "lr"  # large reals
+    SI = "si"  # small integers
+    LI = "li"  # large integers
+
+    @property
+    def exponent_sign(self) -> int:
+        return +1 if self in (Flavor.SR, Flavor.SI) else -1
+
+    @property
+    def is_integer(self) -> bool:
+        return self in (Flavor.SI, Flavor.LI)
+
+
+def _code_dtype(n_bits: int):
+    if n_bits <= 8:
+        return np.uint8
+    if n_bits <= 16:
+        return np.uint16
+    return np.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class F2PFormat:
+    """An F2P^H number format of ``n_bits`` total bits (incl. sign if signed)."""
+
+    n_bits: int
+    h_bits: int
+    flavor: Flavor
+    signed: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.flavor, str):  # convenience
+            object.__setattr__(self, "flavor", Flavor(self.flavor.lower()))
+        if not (1 <= self.h_bits <= 3):
+            raise ValueError("h_bits must be in [1,3] (paper uses 1-2; 4+ overflows f64)")
+        if self.payload_bits < self.h_bits + self.max_e_bits:
+            raise ValueError(
+                f"n_bits={self.n_bits} too small for H={self.h_bits}: need "
+                f">= {self.h_bits + self.max_e_bits} payload bits"
+            )
+
+    # ---- derived constants ------------------------------------------------
+    @property
+    def payload_bits(self) -> int:
+        return self.n_bits - (1 if self.signed else 0)
+
+    @property
+    def max_e_bits(self) -> int:
+        return (1 << self.h_bits) - 1
+
+    @property
+    def vmax(self) -> int:
+        """Number of distinct exponent values (paper Eq. 4); V in [0, vmax-1]."""
+        return (1 << (1 << self.h_bits)) - 1
+
+    @property
+    def bias(self) -> int:
+        nu, h = self.payload_bits, self.h_bits
+        if self.flavor == Flavor.SR:
+            return -(self.vmax + 1) // 2
+        if self.flavor == Flavor.LR:
+            return (self.vmax - 1) // 2
+        if self.flavor == Flavor.SI:
+            return nu - h - 1
+        # LI
+        return nu - h - (1 << h) + self.vmax - 1
+
+    @property
+    def e_min(self) -> int:
+        return 0 if self.flavor.exponent_sign > 0 else -(self.vmax - 1)
+
+    @property
+    def code_dtype(self):
+        return _code_dtype(self.n_bits)
+
+    def __str__(self) -> str:  # e.g. "F2P_LI^2 n=8"
+        s = "s" if self.signed else "u"
+        return f"F2P_{self.flavor.name}^{self.h_bits}[{self.n_bits}{s}]"
+
+    # ---- field helpers ----------------------------------------------------
+    def e_bits_of_v(self, v):
+        """Exponent-field size for exponent value v: smallest E with v <= 2^(E+1)-2."""
+        v = np.asarray(v, dtype=np.int64)
+        return np.where(v > 0, np.int64(np.floor(np.log2(np.maximum(v, 1) + 1))), 0)
+
+    def m_bits_of_e(self, e_bits):
+        return self.payload_bits - self.h_bits - np.asarray(e_bits, dtype=np.int64)
+
+    # ---- decode: payload code -> fields -> value ----------------------------
+    def split_payload(self, payload: np.ndarray):
+        """payload uint -> (v, m_bits, mantissa_uint). Vectorized, exact."""
+        p = np.asarray(payload, dtype=np.int64)
+        nu, h = self.payload_bits, self.h_bits
+        e_bits = (p >> (nu - h)) & ((1 << h) - 1)  # hyper-exp field = E size
+        m_bits = nu - h - e_bits
+        e_field = (p >> m_bits) & ((1 << e_bits) - 1)
+        v = ((np.int64(1) << e_bits) - 1) + e_field  # paper Eq. 3
+        mant = p & ((np.int64(1) << m_bits) - 1)
+        return v, m_bits, mant
+
+    def decode_payload(self, payload: np.ndarray) -> np.ndarray:
+        """Unsigned payload codes -> float64 magnitudes (exact)."""
+        v, m_bits, mant = self.split_payload(payload)
+        e_val = self.flavor.exponent_sign * v
+        b = self.bias
+        normal = e_val > self.e_min
+        # normal: 2^(E+B-m_bits) * (2^m_bits + mant); subnormal: 2^(E+B+1-m_bits) * mant
+        exp2 = np.where(normal, e_val + b - m_bits, e_val + b + 1 - m_bits)
+        sig = np.where(normal, (np.int64(1) << m_bits) + mant, mant)
+        return np.ldexp(sig.astype(np.float64), exp2.astype(np.int64))
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """Full codes (incl. sign bit if signed) -> float64 values."""
+        c = np.asarray(codes, dtype=np.int64)
+        if not self.signed:
+            return self.decode_payload(c)
+        sign = (c >> self.payload_bits) & 1
+        mag = self.decode_payload(c & ((1 << self.payload_bits) - 1))
+        return np.where(sign == 1, -mag, mag)
+
+    # ---- grid ---------------------------------------------------------------
+    # NOTE on code<->value order: exponent *buckets* are monotone in the code
+    # (increasing value for SR/SI, decreasing for LR/LI) but the mantissa always
+    # increases the value, so for LR/LI the full code order is NOT value order.
+    # We keep an explicit argsort mapping sorted-position -> code.
+
+    @functools.cached_property
+    def _values_by_code(self) -> np.ndarray:
+        codes = np.arange(1 << self.payload_bits, dtype=np.int64)
+        return self.decode_payload(codes)
+
+    @functools.cached_property
+    def _code_by_rank(self) -> np.ndarray:
+        """sorted position (rank) -> payload code."""
+        return np.argsort(self._values_by_code, kind="stable")
+
+    @functools.cached_property
+    def payload_grid(self) -> np.ndarray:
+        """All representable magnitudes, strictly ascending. Shape (2^payload_bits,)."""
+        g = self._values_by_code[self._code_by_rank]
+        assert np.all(np.diff(g) > 0), f"grid not strictly increasing for {self}"
+        return g
+
+    @functools.cached_property
+    def grid(self) -> np.ndarray:
+        """Sorted array of ALL representable values (signed includes negatives).
+
+        For signed formats, -0 and +0 collapse to a single 0 entry."""
+        pos = self.payload_grid
+        if not self.signed:
+            return pos
+        neg = -pos[::-1]
+        if pos[0] == 0.0:
+            return np.concatenate([neg[:-1], pos])  # drop duplicate zero
+        return np.concatenate([neg, pos])
+
+    @property
+    def max_value(self) -> float:
+        return float(self.payload_grid[-1])
+
+    @property
+    def min_value(self) -> float:
+        return -self.max_value if self.signed else float(self.payload_grid[0])
+
+    @property
+    def min_positive(self) -> float:
+        g = self.payload_grid
+        return float(g[g > 0][0])
+
+    # ---- encode: value -> nearest code --------------------------------------
+    def encode_payload_nearest(self, x: np.ndarray) -> np.ndarray:
+        """Magnitudes -> payload codes of the nearest representable value.
+
+        Round-to-nearest; ties go to the LARGER magnitude. Values outside the
+        range clamp to the extreme codes."""
+        g = self.payload_grid
+        x = np.asarray(x, dtype=np.float64)
+        mid = (g[:-1] + g[1:]) / 2.0
+        rank = np.searchsorted(mid, x, side="right")  # ties -> larger magnitude
+        return self._code_by_rank[rank].astype(self.code_dtype)
+
+    def encode_nearest(self, x: np.ndarray) -> np.ndarray:
+        """Values -> full codes (handles sign bit). Ties away from zero."""
+        x = np.asarray(x, dtype=np.float64)
+        if not self.signed:
+            return self.encode_payload_nearest(np.maximum(x, 0.0))
+        sign = (x < 0) | ((x == 0) & np.signbit(x))
+        mag_codes = self.encode_payload_nearest(np.abs(x)).astype(np.int64)
+        full = (sign.astype(np.int64) << self.payload_bits) | mag_codes
+        return full.astype(self.code_dtype)
+
+    def quantize_value(self, x: np.ndarray) -> np.ndarray:
+        """Round values to the nearest representable value (round-trip)."""
+        return self.decode(self.encode_nearest(x))

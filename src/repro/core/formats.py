@@ -1,0 +1,179 @@
+"""Baseline number formats the paper compares against (Sec. III).
+
+All formats expose the same tiny protocol used by the quantizer and the
+counter simulator:
+
+    .grid          sorted float64 ndarray of ALL representable values
+    .max_value / .min_value
+    .quantize_value(x) -> nearest representable values (ties away from zero)
+
+Formats: INTk, generic xMyE floating point (no inf/nan, with subnormals --
+matching the paper's "we discard special values" convention), FP16/BF16/TF32
+aliases, and dynamic SEAD (unary exponent prefix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+__all__ = ["GridFormat", "IntFormat", "FPFormat", "SEADFormat",
+           "fp16", "bf16", "tf32", "named_format"]
+
+
+class GridFormat:
+    """Base: quantization by nearest-grid-point (ties toward larger value)."""
+
+    @property
+    def grid(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def max_value(self) -> float:
+        return float(self.grid[-1])
+
+    @property
+    def min_value(self) -> float:
+        return float(self.grid[0])
+
+    def quantize_value(self, x: np.ndarray) -> np.ndarray:
+        g = self.grid
+        x = np.asarray(x, dtype=np.float64)
+        mid = (g[:-1] + g[1:]) / 2.0
+        idx = np.searchsorted(mid, x, side="right")
+        return g[idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat(GridFormat):
+    """INTk. Signed = two's complement range; unsigned = [0, 2^k-1]."""
+
+    n_bits: int
+    signed: bool = False
+
+    @functools.cached_property
+    def grid(self) -> np.ndarray:
+        if self.signed:
+            return np.arange(-(1 << (self.n_bits - 1)),
+                             (1 << (self.n_bits - 1)), dtype=np.float64)
+        return np.arange(1 << self.n_bits, dtype=np.float64)
+
+    def __str__(self):
+        return f"INT{self.n_bits}{'s' if self.signed else 'u'}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat(GridFormat):
+    """Generic xMyE float ("xMyE" in the paper): 1 sign (opt) + e_bits + m_bits.
+
+    Bias follows the paper's symmetrical-power principle B = -2^(E-1); value
+    rule is paper Eq. 2 (subnormals at the lowest exponent, no inf/nan)."""
+
+    m_bits: int
+    e_bits: int
+    signed: bool = False
+
+    @property
+    def bias(self) -> int:
+        return -(1 << (self.e_bits - 1))
+
+    @functools.cached_property
+    def _payload_grid(self) -> np.ndarray:
+        e = np.arange(1 << self.e_bits, dtype=np.int64)[:, None]
+        m = np.arange(1 << self.m_bits, dtype=np.int64)[None, :]
+        mant = m.astype(np.float64) / (1 << self.m_bits)
+        b = self.bias
+        normal = np.ldexp(1.0 + mant, e + b)
+        sub = np.ldexp(mant, e + b + 1)
+        vals = np.where(e > 0, normal, sub).ravel()
+        return np.unique(vals)
+
+    @functools.cached_property
+    def grid(self) -> np.ndarray:
+        pos = self._payload_grid
+        if not self.signed:
+            return pos
+        neg = -pos[::-1]
+        return np.concatenate([neg[:-1], pos]) if pos[0] == 0 else np.concatenate([neg, pos])
+
+    def __str__(self):
+        return f"{self.m_bits}M{self.e_bits}E{'s' if self.signed else 'u'}"
+
+
+def fp16(signed=True):
+    return FPFormat(m_bits=10, e_bits=5, signed=signed)
+
+
+def bf16(signed=True):
+    return FPFormat(m_bits=7, e_bits=8, signed=signed)
+
+
+def tf32(signed=True):
+    """19-bit TensorFloat32 (10M8E)."""
+    return FPFormat(m_bits=10, e_bits=8, signed=signed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SEADFormat(GridFormat):
+    """Dynamic SEAD (Liu et al., ToN'21) — unary-encoded exponent.
+
+    An N-bit dynamic SEAD counter spends its exponent as a unary prefix of e
+    ones followed by a terminating zero (the all-ones prefix of length N-1
+    needs no terminator), leaving N-1-e mantissa bits at stage e. Stage e
+    counts with step 2^e starting where stage e-1 ended:
+
+        start_0 = 0;  start_{e+1} = start_e + 2^e * 2^(N-1-e) = start_e + 2^(N-1)
+
+    This is the model the F2P paper evaluates against: the unary exponent is
+    space-inefficient, shrinking the mantissa and hence accuracy."""
+
+    n_bits: int
+    signed: bool = False
+
+    @functools.cached_property
+    def _payload_grid(self) -> np.ndarray:
+        n = self.n_bits - (1 if self.signed else 0)
+        vals = []
+        start = 0.0
+        for e in range(n):
+            m_bits = n - 1 - e
+            k = np.arange(1 << m_bits, dtype=np.float64)
+            vals.append(start + k * (2.0 ** e))
+            start += (2.0 ** e) * (1 << m_bits)
+        return np.unique(np.concatenate(vals))
+
+    @functools.cached_property
+    def grid(self) -> np.ndarray:
+        pos = self._payload_grid
+        if not self.signed:
+            return pos
+        neg = -pos[::-1]
+        return np.concatenate([neg[:-1], pos]) if pos[0] == 0 else np.concatenate([neg, pos])
+
+    def __str__(self):
+        return f"SEAD{self.n_bits}{'s' if self.signed else 'u'}"
+
+
+def named_format(name: str, signed: bool = False) -> GridFormat:
+    """Parse 'int8', '5m2e', 'fp16', 'bf16', 'tf32', 'sead8', 'f2p_sr_2_8'."""
+    from repro.core.f2p import F2PFormat, Flavor
+
+    name = name.lower()
+    if name.startswith("int"):
+        return IntFormat(int(name[3:]), signed=signed)
+    if name.startswith("sead"):
+        return SEADFormat(int(name[4:]), signed=signed)
+    if name == "fp16":
+        return fp16(signed)
+    if name == "bf16":
+        return bf16(signed)
+    if name == "tf32":
+        return tf32(signed)
+    if "m" in name and name.endswith("e"):
+        m, e = name[:-1].split("m")
+        return FPFormat(m_bits=int(m), e_bits=int(e), signed=signed)
+    if name.startswith("f2p"):
+        _, fl, h, n = name.split("_")
+        return F2PFormat(n_bits=int(n), h_bits=int(h), flavor=Flavor(fl), signed=signed)
+    raise ValueError(f"unknown format {name!r}")

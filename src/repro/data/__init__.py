@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, host_batch, global_batch

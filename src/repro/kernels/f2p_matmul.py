@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused F2P8-dequant matmul  y = x @ dequant(W).
+
+Serving path for F2P8-quantized weights: W lives in HBM as uint8 codes +
+per-block f32 scales (1.03 B/param). Each grid step streams an (K_T, N_T)
+code tile into VMEM (1 byte/elem — half the bf16 footprint, so double the
+effective HBM bandwidth on the weight stream), dequantizes in-register with
+the branch-free decode (no LUT/gather — DESIGN.md §3), and feeds the MXU
+tile. Accumulation in f32 across the K grid axis.
+
+Tiling: grid (M/M_T, N/N_T, K/K_T); x tile (M_T,K_T) bf16/f32, codes tile
+(K_T,N_T) uint8, scales tile (K_T/block, N_T) f32, out (M_T,N_T) f32 —
+MXU-aligned multiples of 128 on every matmul dim.
+
+Oracle: ref_dequant_matmul (pure jnp) — tests sweep shapes/dtypes/formats
+and assert allclose within f32 matmul tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
+
+WEIGHT_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
+
+M_T, N_T, K_T = 128, 256, 256
+
+
+def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128):
+    """w [K,N] -> (codes uint8 [K,N], scales f32 [K/block, N]). The scale
+    block runs along K (the contraction axis) so dequant*x accumulates per
+    K-block — matching the kernel's K-tiled loop."""
+    K, N = w.shape
+    assert K % block == 0
+    wb = w.astype(jnp.float32).reshape(K // block, block, N)
+    absmax = jnp.max(jnp.abs(wb), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / fmt.max_value),
+                      1.0).astype(jnp.float32)
+    codes = quantize_tile_math((wb / scale).astype(jnp.float32), fmt)
+    return codes.reshape(K, N), scale[:, 0, :]
+
+
+def ref_dequant_matmul(x, codes, scales, fmt: F2PFormat = WEIGHT_FMT,
+                       block: int = 128):
+    """Oracle: dequantize the whole W then a plain f32 matmul."""
+    K, N = codes.shape
+    w = dequantize_tile_math(codes, fmt, jnp.float32)
+    w = (w.reshape(K // block, block, N) * scales[:, None, :]).reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def _kernel(fmt, block, nk, x_ref, c_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # [M_T, K_T]
+    w = dequantize_tile_math(c_ref[...], fmt, jnp.float32)  # [K_T, N_T]
+    kt, nt = w.shape
+    w = (w.reshape(kt // block, block, nt) * s_ref[...][:, None, :])
+    w = w.reshape(kt, nt)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def f2p_dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,
+                       block: int = 128, interpret: bool = True):
+    """y = x @ dequant(codes, scales); x [M,K], codes [K,N] uint8."""
+    M, K = x.shape
+    K2, N = codes.shape
+    assert K == K2 and K % K_T == 0 and K_T % block == 0
+    mt, nt = min(M_T, M), min(N_T, N)
+    assert M % mt == 0 and N % nt == 0
+    grid = (M // mt, N // nt, K // K_T)
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt, block, K // K_T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mt, K_T), lambda i, j, k: (i, k)),
+            pl.BlockSpec((K_T, nt), lambda i, j, k: (k, j)),
+            pl.BlockSpec((K_T // block, nt), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scales)

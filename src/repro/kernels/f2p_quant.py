@@ -1,0 +1,227 @@
+"""Pallas TPU kernels: block-scaled F2P quantize / dequantize.
+
+TPU adaptation (see DESIGN.md §3): no lookup tables — encode/decode are
+branch-free VPU lane arithmetic:
+
+  encode:  exact floor(log2 x) via f32 bitcast -> exponent-bucket V ->
+           per-bucket mantissa width (integer ops) -> round-half-up mantissa
+           (exact in f32: all intermediates fit 24-bit significands) ->
+           field assembly with variable shifts.
+  decode:  field split with variable shifts -> ldexp (exact).
+
+Tiling: elementwise over (rows, cols); BlockSpec tiles of (TILE_R, TILE_C)
+float32 in VMEM, TILE_C a multiple of 128 lanes (the per-block scale axis),
+TILE_R a multiple of 8 sublanes. One grid step touches
+TILE_R*TILE_C*(4+1)+TILE_R*(TILE_C/block)*4 bytes of VMEM.
+
+Supported: h_bits in {1,2}, n_bits in [6,16] — the paper's operating points.
+Exactness: encode of a given f32 value is bit-exact vs repro.kernels.ref
+(ties half-up == oracle's ties-to-larger-magnitude); the only shared rounding
+is the f32 division by the scale, identical in both paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.f2p import F2PFormat
+
+__all__ = ["quantize_tile_math", "dequantize_tile_math",
+           "f2p_quantize_pallas", "f2p_dequantize_pallas"]
+
+# Default tile: 8 sublanes x 512 lanes of f32 = 16 KiB in, 4 KiB codes out.
+TILE_R = 8
+TILE_C = 512
+
+
+def _exp2i(n: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^n for int32 n in [-126, 127], built by bit assembly (no libm)."""
+    return jax.lax.bitcast_convert_type(((n + 127) << 23).astype(jnp.int32),
+                                        jnp.float32)
+
+
+def _fmt_consts(fmt: F2PFormat):
+    if fmt.h_bits not in (1, 2):
+        raise ValueError("kernel supports h_bits in {1,2}")
+    nu, h = fmt.payload_bits, fmt.h_bits
+    sgn = fmt.flavor.exponent_sign
+    vmax = fmt.vmax
+    v_sub = 0 if sgn > 0 else vmax - 1   # the subnormal bucket
+    v_top = vmax - 1 if sgn > 0 else 0   # bucket holding the largest values
+    return nu, h, sgn, vmax, v_sub, v_top, fmt.bias
+
+
+def quantize_tile_math(x: jnp.ndarray, fmt: F2PFormat) -> jnp.ndarray:
+    """Branch-free exact nearest-F2P encode of f32 magnitudes+signs -> codes.
+
+    Pure jnp on purpose: runs identically inside the Pallas kernel body and
+    under plain jit (the `ops.py` fallback path when Pallas is unavailable)."""
+    nu, h, sgn, vmax, v_sub, v_top, bias = _fmt_consts(fmt)
+    x = x.astype(jnp.float32)
+    sign = jnp.signbit(x) if fmt.signed else jnp.zeros(x.shape, bool)
+    mag = jnp.abs(x)
+
+    # exact floor(log2 mag) via bitcast; f32-subnormal/zero inputs -> bucket 0
+    bits = jax.lax.bitcast_convert_type(mag, jnp.int32)
+    bexp = (bits >> 23) & 0xFF
+    k = bexp - 127
+    is_zero = bexp == 0
+
+    v = jnp.clip(sgn * (k - bias), 0, vmax - 1)
+    v = jnp.where(is_zero, v_sub, v)
+
+    def esize_of(v):
+        # floor(log2(v+1)) as exact integer thresholds: esize grows by one at
+        # v = 2^j - 1 for each j in [1, 2^h - 1]
+        es = jnp.zeros_like(v)
+        for j in range(1, (1 << h)):
+            es = es + (v >= ((1 << j) - 1)).astype(v.dtype)
+        return es
+
+    def mant_round(v):
+        """Round mantissa within bucket v; returns (m, mbits, overflow)."""
+        es = esize_of(v)
+        mbits = nu - h - es
+        is_sub = v == v_sub
+        e_val = sgn * v
+        exp_lo = jnp.where(is_sub, e_val + bias + 1, e_val + bias)
+        lead = jnp.where(is_sub, 0, 1)
+        # u = mag * 2^(mbits-exp_lo) - lead*2^mbits  (exact, see module doc)
+        u = mag * _exp2i(mbits - exp_lo)
+        u = u - (lead << mbits).astype(jnp.float32)
+        # far-out-of-range x would overflow the int cast; clamp to "overflow"
+        u = jnp.minimum(u, 2.0 * (1 << mbits).astype(jnp.float32))
+        m = jnp.floor(u + 0.5).astype(jnp.int32)
+        m = jnp.maximum(m, 0)
+        ovf = m >= (1 << mbits)
+        return m, mbits, ovf
+
+    m, mbits, ovf = mant_round(v)
+    at_top = v == v_top
+    # overflow moves one bucket toward larger magnitudes (V+1 for SR/SI,
+    # V-1 for LR/LI); at the very top it clamps to the max code instead
+    v2 = jnp.where(ovf & ~at_top, v + sgn, v)
+    es2 = esize_of(v2)
+    mbits2 = nu - h - es2
+    m2 = jnp.where(ovf, jnp.where(at_top, (1 << mbits2) - 1, 0), m)
+
+    efield = v2 - ((1 << es2) - 1)
+    payload = (es2 << (nu - h)) | (efield << mbits2) | m2
+    if fmt.signed:
+        payload = payload | (sign.astype(jnp.int32) << nu)
+    return payload.astype(jnp.uint8 if fmt.n_bits <= 8 else jnp.uint16)
+
+
+def dequantize_tile_math(codes: jnp.ndarray, fmt: F2PFormat,
+                         out_dtype=jnp.float32) -> jnp.ndarray:
+    """Branch-free exact F2P decode: codes -> f32 values (unscaled)."""
+    nu, h, sgn, vmax, v_sub, v_top, bias = _fmt_consts(fmt)
+    c = codes.astype(jnp.int32)
+    payload = c & ((1 << nu) - 1)
+    es = (payload >> (nu - h)) & ((1 << h) - 1)
+    mbits = nu - h - es
+    efield = (payload >> mbits) & ((1 << es) - 1)
+    v = ((1 << es) - 1) + efield
+    m = payload & ((1 << mbits) - 1)
+    is_sub = v == v_sub
+    e_val = sgn * v
+    exp_lo = jnp.where(is_sub, e_val + bias + 1, e_val + bias)
+    lead = jnp.where(is_sub, 0, 1)
+    sig = ((lead << mbits) + m).astype(jnp.float32)
+    val = sig * _exp2i(exp_lo - mbits)
+    if fmt.signed:
+        sign = (c >> nu) & 1
+        val = jnp.where(sign == 1, -val, val)
+    return val.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+def _quant_kernel(fmt: F2PFormat, block: int, scale_mode: str,
+                  x_ref, codes_ref, scales_ref):
+    x = x_ref[...].astype(jnp.float32)
+    r, ccols = x.shape
+    xb = x.reshape(r, ccols // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # multiply by reciprocal constant: XLA const-folds `x / const` into this
+    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
+    scale = absmax * jnp.float32(1.0 / fmt.max_value)
+    if scale_mode == "pow2":
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+    scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+    y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, ccols)
+    codes_ref[...] = quantize_tile_math(y, fmt)
+    scales_ref[...] = scale
+
+
+def _dequant_kernel(fmt: F2PFormat, block: int, out_dtype,
+                    codes_ref, scales_ref, out_ref):
+    codes = codes_ref[...]
+    r, ccols = codes.shape
+    vals = dequantize_tile_math(codes, fmt, jnp.float32)
+    vals = vals.reshape(r, ccols // block, block) * scales_ref[...][..., None]
+    out_ref[...] = vals.reshape(r, ccols).astype(out_dtype)
+
+
+def _grid2d(shape, tr, tc):
+    r, c = shape
+    assert r % tr == 0 and c % tc == 0, f"shape {shape} not tileable ({tr},{tc})"
+    return (r // tr, c // tc)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode",
+                                             "interpret", "tile_r", "tile_c"))
+def f2p_quantize_pallas(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
+                        scale_mode: str = "f32", interpret: bool = True,
+                        tile_r: int = TILE_R, tile_c: int = TILE_C):
+    """Blocked F2P quantization of a 2D array. Returns (codes, scales)."""
+    r, c = x.shape
+    tile_c = min(tile_c, c)
+    tile_r = min(tile_r, r)
+    assert c % block == 0 and tile_c % block == 0
+    grid = _grid2d((r, c), tile_r, tile_c)
+    code_dtype = jnp.uint8 if fmt.n_bits <= 8 else jnp.uint16
+    codes, scales = pl.pallas_call(
+        functools.partial(_quant_kernel, fmt, block, scale_mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_r, tile_c // block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), code_dtype),
+            jax.ShapeDtypeStruct((r, c // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return codes, scales
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype",
+                                             "interpret", "tile_r", "tile_c"))
+def f2p_dequantize_pallas(codes: jnp.ndarray, scales: jnp.ndarray,
+                          fmt: F2PFormat, *, block: int = 128,
+                          out_dtype=jnp.float32, interpret: bool = True,
+                          tile_r: int = TILE_R, tile_c: int = TILE_C):
+    r, c = codes.shape
+    tile_c = min(tile_c, c)
+    tile_r = min(tile_r, r)
+    grid = _grid2d((r, c), tile_r, tile_c)
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, fmt, block, out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_r, tile_c // block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(codes, scales)
+    return out

@@ -1,0 +1,147 @@
+"""Public jit'd F2P tensor ops used across the framework.
+
+`f2p_quantize` / `f2p_dequantize` accept arbitrary-rank arrays (the last axis
+is the blocked one), pad to tile boundaries, and dispatch to the Pallas
+kernels (interpret=True on CPU, compiled on TPU) or to the same tile math
+under plain jit (`use_pallas=False` — the path the big jitted train/serve
+steps embed, since XLA fuses it into surrounding HLO).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.f2p import F2PFormat
+from repro.kernels import f2p_quant as K
+
+__all__ = ["f2p_quantize", "f2p_dequantize", "QTensor", "quantize_tree",
+           "dequantize_tree"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """An F2P block-quantized tensor: codes + per-block scales + static meta."""
+
+    def __init__(self, codes, scales, fmt: F2PFormat, block: int, shape):
+        self.codes, self.scales = codes, scales
+        self.fmt, self.block, self.shape = fmt, block, tuple(shape)
+
+    def dequantize(self, dtype=jnp.float32):
+        return f2p_dequantize(self.codes, self.scales, self.fmt,
+                              block=self.block, out_dtype=dtype,
+                              out_shape=self.shape)
+
+    @property
+    def nbytes(self):
+        return self.codes.size * self.codes.dtype.itemsize + \
+            self.scales.size * self.scales.dtype.itemsize
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.fmt, self.block, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __repr__(self):
+        return f"QTensor({self.shape}, fmt={self.fmt}, block={self.block})"
+
+
+def _to_2d(x, block):
+    """Collapse to (rows, cols) with cols % block == 0, padding rows to 8."""
+    n = x.shape[-1]
+    lead = int(x.size // n) if x.ndim > 1 else 1
+    x2 = x.reshape(lead, n)
+    pad_r = (-lead) % 8
+    pad_c = (-n) % block
+    if pad_r or pad_c:
+        x2 = jnp.pad(x2, ((0, pad_r), (0, pad_c)))
+    return x2, lead, n
+
+
+def f2p_quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
+                 scale_mode: str = "f32", use_pallas: bool | None = None
+                 ) -> QTensor:
+    """Block-quantize any-rank array along its last axis into a QTensor."""
+    orig_shape = x.shape
+    x2, lead, n = _to_2d(x, block)
+    if use_pallas is None:
+        use_pallas = not _in_trace()
+    if use_pallas:
+        codes, scales = K.f2p_quantize_pallas(
+            x2, fmt, block=block, scale_mode=scale_mode,
+            interpret=not _on_tpu())
+    else:
+        codes, scales = _quantize_jit_math(x2, fmt, block, scale_mode)
+    return QTensor(codes, scales, fmt, block, orig_shape)
+
+
+def f2p_dequantize(codes, scales, fmt: F2PFormat, *, block: int = 128,
+                   out_dtype=jnp.float32, out_shape=None,
+                   use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = not _in_trace()
+    if use_pallas:
+        out = K.f2p_dequantize_pallas(codes, scales, fmt, block=block,
+                                      out_dtype=out_dtype,
+                                      interpret=not _on_tpu())
+    else:
+        vals = K.dequantize_tile_math(codes, fmt, jnp.float32)
+        r, c = codes.shape
+        vals = vals.reshape(r, c // block, block) * scales[..., None]
+        out = vals.reshape(r, c).astype(out_dtype)
+    if out_shape is not None:
+        lead = 1
+        for d in out_shape[:-1]:
+            lead *= d
+        out = out[:lead, :out_shape[-1]].reshape(out_shape)
+    return out
+
+
+def _in_trace() -> bool:
+    """True when called inside a jit trace — embed tile math instead of an
+    inner pallas_call (XLA fuses it; also interpret-mode pallas inside jit on
+    CPU is unnecessarily slow)."""
+    return isinstance(jnp.zeros(()), jax.core.Tracer)
+
+
+def _quantize_jit_math(x2, fmt, block, scale_mode):
+    x32 = x2.astype(jnp.float32)
+    r, c = x32.shape
+    xb = x32.reshape(r, c // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # multiply by reciprocal constant: XLA const-folds `x / const` into this
+    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
+    scale = absmax * jnp.float32(1.0 / fmt.max_value)
+    if scale_mode == "pow2":
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+    scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+    y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, c)
+    return K.quantize_tile_math(y, fmt), scale
+
+
+# ---- pytree helpers (gradient compression / checkpoint paths) -------------
+def quantize_tree(tree, fmt: F2PFormat, *, block: int = 128,
+                  min_size: int = 1024, scale_mode: str = "f32"):
+    """Quantize every array leaf with >= min_size elements; pass small leaves
+    through (biases, norms — their bytes don't matter, their precision does)."""
+
+    def q(x):
+        if x.size >= min_size and jnp.issubdtype(x.dtype, jnp.floating):
+            return f2p_quantize(x, fmt, block=block, scale_mode=scale_mode)
+        return x
+
+    return jax.tree.map(q, tree)
+
+
+def dequantize_tree(tree, dtype=jnp.float32):
+    def dq(x):
+        return x.dequantize(dtype) if isinstance(x, QTensor) else x
+
+    return jax.tree.map(dq, tree, is_leaf=lambda x: isinstance(x, QTensor))

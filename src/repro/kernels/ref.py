@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the F2P Pallas kernels.
+
+Semantics contract (shared by ref and kernel, tested bit-exact):
+
+  quantize(x, fmt, block):
+    x: float array, last dim split into blocks of `block`
+    scale_b = absmax_b / fmt.max_value           (f32 math; 'pow2' mode rounds
+                                                  the scale UP to a power of 2)
+    y = f32(x) / scale_b                          (f32 division)
+    codes = exact nearest-F2P encode of y, ties toward larger magnitude
+  dequantize(codes, scales): exact decode * scale, in f32.
+
+The *encode of a given f32 value* is exact in both paths; the only
+platform-dependent rounding is the f32 division, which ref and kernel share.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.f2p import F2PFormat
+
+__all__ = ["quantize_ref", "dequantize_ref", "grid_tables"]
+
+
+@functools.lru_cache(maxsize=64)
+def grid_tables(fmt: F2PFormat):
+    """(sorted magnitude grid, rank->code table, midpoints) as f64 numpy."""
+    g = fmt.payload_grid
+    code = fmt._code_by_rank.astype(np.int32)
+    mid = (g[:-1] + g[1:]) / 2.0
+    return g, code, mid
+
+
+def _scales(x32: jnp.ndarray, fmt: F2PFormat, block: int, scale_mode: str):
+    *lead, n = x32.shape
+    xb = x32.reshape(*lead, n // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # multiply by reciprocal constant: XLA const-folds `x / const` into this
+    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
+    scale = absmax * jnp.float32(1.0 / fmt.max_value)
+    if scale_mode == "pow2":
+        # round scale UP to a power of two => exact division, deterministic
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+    scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+    return xb, scale
+
+
+def quantize_ref(x: jnp.ndarray, fmt: F2PFormat, block: int = 128,
+                 scale_mode: str = "f32"):
+    """Oracle blocked quantization. Returns (codes, scales).
+
+    codes dtype: uint8 (n_bits<=8) / uint16; scales f32 with shape
+    x.shape[:-1] + (n/block,)."""
+    assert x.shape[-1] % block == 0
+    x32 = x.astype(jnp.float32)
+    xb, scale = _scales(x32, fmt, block, scale_mode)
+    y = (xb / scale[..., None]).astype(jnp.float32)
+
+    g, code_by_rank, mid = grid_tables(fmt)
+    # grid points and midpoints are exactly f32-representable (significands
+    # need <= mbits+2 <= 16 bits), so f32 comparisons are exact here
+    mag = jnp.abs(y).astype(jnp.float32)
+    rank = jnp.searchsorted(jnp.asarray(mid, dtype=np.float32), mag, side="right")
+    payload = jnp.asarray(code_by_rank)[rank]
+    if fmt.signed:
+        sign = (y < 0) | ((y == 0) & jnp.signbit(y))
+        payload = payload | (sign.astype(jnp.int32) << fmt.payload_bits)
+    codes = payload.astype(jnp.uint8 if fmt.n_bits <= 8 else jnp.uint16)
+    return codes.reshape(x.shape), scale
+
+
+def dequantize_ref(codes: jnp.ndarray, scales: jnp.ndarray, fmt: F2PFormat,
+                   block: int = 128, out_dtype=jnp.float32):
+    *lead, n = codes.shape
+    cb = codes.reshape(*lead, n // block, block).astype(jnp.int32)
+    payload = cb & ((1 << fmt.payload_bits) - 1)
+    vals = jnp.asarray(fmt._values_by_code.astype(np.float32))[payload]
+    if fmt.signed:
+        sign = (cb >> fmt.payload_bits) & 1
+        vals = jnp.where(sign == 1, -vals, vals)
+    out = vals * scales[..., None]
+    return out.reshape(codes.shape).astype(out_dtype)

@@ -1,0 +1,311 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, so any
+lax.scan model (scan-over-layers, chunked attention, SSM scans) is massively
+undercounted. This module parses the optimized HLO text instead:
+
+  * computations are parsed into ops with result/operand shapes;
+  * while ops carry `backend_config={"known_trip_count":{"n":...}}` (fallback:
+    the `constant(N)` feeding the cond's LT compare);
+  * a multiplier propagates down the call graph (ENTRY=1, while body x trip,
+    fusions/calls inherit);
+  * FLOPs: 2*prod(result)*prod(contracting) per dot (visiting fusion bodies);
+  * HBM bytes: operand+result bytes of ops in *scheduled* computations only
+    (entry + while bodies); fusion-internal ops live in registers/VMEM;
+  * collective bytes: ring-model per op (see launch.roofline), x multiplier.
+
+Scope limits (documented): convolutions are not counted (the framework uses
+no conv HLOs); rng/transcendental flops ignored (negligible vs matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .+ \{$")
+_OP_LINE = re.compile(r"^(?:ROOT )?%([\w\.\-]+) = (.*)$")
+# first lowercase-word immediately followed by "(" in the rhs = the op kind
+# (tuple-typed results contain no such token before the kind)
+_KIND = re.compile(r"([a-z][\w\-]*)\(")
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_TRIP = re.compile(r"known_trip_count[\"'{:\s]+n[\"':\s]+(\d+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_shape(text: str):
+    """First shape token in `text` -> (dtype, dims) or None. Handles tuples
+    by summing bytes over members separately where needed."""
+    shapes = []
+    for dt, dims in _SHAPE_TOK.findall(text):
+        if dt in _DTYPE_BYTES:
+            d = [int(x) for x in dims.split(",") if x] if dims else []
+            shapes.append((dt, d))
+    return shapes
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_shapes: list
+    rest: str          # full remainder of the line (operands + attrs)
+    is_root: bool = False
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.symtab: dict[str, dict[str, list]] = {}  # comp -> op -> shapes
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = m.group(1)
+                self.computations[cur] = []
+                self.symtab[cur] = {}
+                if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None or line == "}":
+                if line == "}":
+                    cur = None
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                name, rhs = m.groups()
+                km = _KIND.search(rhs)
+                if km is None:
+                    continue
+                kind = km.group(1)
+                shapes = _parse_shape(rhs[: km.start()])
+                op = Op(name, kind, shapes, rhs[km.end():],
+                        is_root=line.startswith("ROOT "))
+                self.computations[cur].append(op)
+                self.symtab[cur][name] = shapes
+
+    # ---- analysis -------------------------------------------------------
+    def analyze(self, n_devices: int = 1):
+        trip: dict[str, int] = {}
+        while_edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+        call_edges: dict[str, list[str]] = defaultdict(list)
+
+        for comp, ops in self.computations.items():
+            for op in ops:
+                if op.kind == "while":
+                    m = _WHILE.search(op.rest)
+                    if not m:
+                        continue
+                    cond, body = m.groups()
+                    t = self._trip_count(op, cond)
+                    while_edges[comp].append((body, t))
+                    while_edges[comp].append((cond, t + 1))
+                else:
+                    for callee in _CALLS.findall(op.rest):
+                        call_edges[comp].append(callee)
+
+        # propagate multipliers from entry
+        mult: dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        order = [self.entry]
+        seen = {self.entry}
+        while order:
+            c = order.pop(0)
+            for body, t in while_edges.get(c, []):
+                mult[body] += mult[c] * t
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+            for callee in call_edges.get(c, []):
+                mult[callee] += mult[c]
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+        # NOTE: shared computations called from multiple sites accumulate.
+
+        scheduled = {self.entry} | {b for edges in while_edges.values()
+                                    for b, _ in edges}
+
+        flops = 0.0
+        hbm_bytes = 0.0
+        coll = {"ring_bytes": 0.0, "naive_bytes": 0.0,
+                "per_op": defaultdict(lambda: {"count": 0.0, "bytes": 0.0,
+                                               "moved": 0.0})}
+        for comp, ops in self.computations.items():
+            k = mult.get(comp, 0.0)
+            if k == 0:
+                continue
+            for op in ops:
+                if op.kind in ("dot",):
+                    flops += k * self._dot_flops(comp, op)
+                if op.kind.startswith(("all-reduce", "all-gather",
+                                       "reduce-scatter", "all-to-all",
+                                       "collective-permute")):
+                    if op.kind.endswith("-done"):
+                        continue
+                    self._collective(comp, op, k, n_devices, coll)
+                if comp in scheduled:
+                    hbm_bytes += k * self._op_hbm_bytes(comp, op)
+        coll["per_op"] = {kk: dict(v) for kk, v in coll["per_op"].items()}
+        return {"flops": flops, "hbm_bytes": hbm_bytes, **coll}
+
+    def _trip_count(self, op: Op, cond: str) -> int:
+        m = _TRIP.search(op.rest)
+        if m:
+            return int(m.group(1))
+        # fallback: constant feeding an LT compare in the cond computation
+        consts = []
+        for o in self.computations.get(cond, []):
+            if o.kind == "constant":
+                mm = re.search(r"constant\((\d+)", "constant(" + o.rest)
+                if mm:
+                    consts.append(int(mm.group(1)))
+        return max(consts) if consts else 1
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        res = 1
+        for dt, dims in op.result_shapes[:1]:
+            for d in dims:
+                res *= d
+        # contracting dims from lhs operand shape
+        mc = _CONTRACT.search(op.rest)
+        contract = 1
+        if mc:
+            idxs = [int(x) for x in mc.group(1).split(",") if x]
+            operands = _OPERAND.findall(op.rest)
+            if operands:
+                lhs_shapes = self.symtab[comp].get(operands[0])
+                if lhs_shapes:
+                    _, dims = lhs_shapes[0]
+                    for i in idxs:
+                        if i < len(dims):
+                            contract *= dims[i]
+        return 2.0 * res * contract
+
+    def _fusion_param_charge(self, callee: str) -> dict[int, float]:
+        """For fusion computation `callee`: parameter index -> bytes actually
+        read, for parameters consumed ONLY through slicing ops (charge the
+        slice, not the buffer). Memoized — big modules reuse fusions."""
+        cache = getattr(self, "_fpc_cache", None)
+        if cache is None:
+            cache = self._fpc_cache = {}
+        if callee in cache:
+            return cache[callee]
+        ops = self.computations.get(callee, [])
+        params = {}
+        for o in ops:
+            if o.kind == "parameter":
+                mi = re.search(r"^(\d+)", o.rest)
+                if mi:
+                    params[o.name] = int(mi.group(1))
+        charge: dict[int, float] = {}
+        for pname, pidx in params.items():
+            consumers = [o for o in ops
+                         if o.kind != "parameter" and
+                         re.search(r"%" + re.escape(pname) + r"\b", o.rest)]
+            if consumers and all(c.kind in ("dynamic-slice", "slice", "gather")
+                                 for c in consumers):
+                charge[pidx] = float(sum(
+                    _bytes_of(c.result_shapes) for c in consumers))
+        cache[callee] = charge
+        return charge
+
+    def _op_hbm_bytes(self, comp: str, op: Op) -> float:
+        if op.kind in ("parameter", "constant", "tuple", "get-tuple-element",
+                       "while", "bitcast", "copy-start", "copy-done"):
+            return 0.0
+        result_b = _bytes_of(op.result_shapes)
+        sliced_charge: dict[int, float] = {}
+        if op.kind == "fusion":
+            mc = _CALLS.search(op.rest)
+            if mc:
+                sliced_charge = self._fusion_param_charge(mc.group(1))
+        operand_b = []
+        for i, name in enumerate(_OPERAND.findall(op.rest)):
+            shapes = self.symtab[comp].get(name)
+            if shapes:
+                if i in sliced_charge:
+                    operand_b.append(sliced_charge[i])
+                else:
+                    operand_b.append(_bytes_of(shapes))
+        # Slicing semantics: ops that read or write a SLICE of a big buffer
+        # must not be billed the whole buffer per loop iteration:
+        #   dynamic-slice (param gather per scan step): touches the slice;
+        #   dynamic-update-slice (in-place scan output): touches the update.
+        # Applies to bare ops and to fusions rooted at them. Without this a
+        # scan-over-layers model is billed its full stacked parameters at
+        # every layer step.
+        root_kind = op.kind
+        if op.kind == "fusion":
+            mc = _CALLS.search(op.rest)
+            if mc:
+                callee_ops = self.computations.get(mc.group(1), [])
+                roots = [o for o in callee_ops if o.is_root]
+                if roots:
+                    if roots[0].kind in ("dynamic-update-slice",
+                                         "dynamic-slice"):
+                        root_kind = roots[0].kind
+        if root_kind == "dynamic-update-slice":
+            small = [b for b in operand_b if b != result_b]
+            return float(2 * sum(small))
+        if root_kind in ("dynamic-slice", "slice", "gather"):
+            # read the slice, write the result
+            return float(2 * result_b)
+        return float(result_b + sum(operand_b))
+
+    def _collective(self, comp, op: Op, k, n_devices, out):
+        kind = op.kind.replace("-start", "")
+        b = _bytes_of(op.result_shapes)
+        mg = re.search(r"replica_groups=\{?\[([\d,]+)\](?:<=\[[\d,]+\])?",
+                       op.rest)
+        if mg:
+            dims = [int(x) for x in mg.group(1).split(",") if x]
+            n = dims[-1] if dims else n_devices
+        else:
+            mg2 = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+            n = len(mg2.group(1).split(",")) if mg2 else n_devices
+        n = max(n, 1)
+        if kind == "all-gather":
+            moved = b * (n - 1) / n
+        elif kind == "all-reduce":
+            moved = 2 * b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = b * (n - 1)
+        elif kind == "all-to-all":
+            moved = b * (n - 1) / n
+        else:
+            moved = b
+        out["ring_bytes"] += k * moved
+        out["naive_bytes"] += k * b
+        slot = out["per_op"][kind]
+        slot["count"] += k
+        slot["bytes"] += k * b
+        slot["moved"] += k * moved
+
+
+def analyze_hlo(text: str, n_devices: int = 1) -> dict:
+    return HloModule(text).analyze(n_devices)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS before importing jax to get 512
+placeholder host devices; real launches get the same shapes from the TPU
+runtime.
+
+Single pod (v5e-256): (16, 16) = ("data", "model")
+Two pods           : (2, 16, 16) = ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes carrying the batch (pod folds into data-parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_host_mesh(n: int | None = None, name: str = "data"):
+    """Small helper mesh over whatever devices exist (tests/examples)."""
+    devs = jax.devices() if n is None else jax.devices()[:n]
+    return jax.make_mesh((len(devs),), (name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

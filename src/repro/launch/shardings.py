@@ -1,0 +1,147 @@
+"""Builders turning (cfg, mesh, shape-kind) into fully-sharded
+ShapeDtypeStruct trees for lowering — no allocation anywhere.
+
+Also home of the cache sharding rules (pattern-matched on leaf names, like
+models.sharding does for params)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models import init_caches, init_params
+from repro.models.config import ModelConfig
+from repro.models.sharding import make_rules, param_specs
+from repro.optim import AdamWConfig, CompressionConfig
+from repro.train import init_train_state
+
+# cache leaf name -> logical axes (leading scan-group dim added automatically)
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv", None),
+    "v": ("batch", "kv_seq", "kv", None),
+    "k_codes": ("batch", "kv_seq", "kv", None),
+    "v_codes": ("batch", "kv_seq", "kv", None),
+    "k_scale": ("batch", "kv_seq", "kv", None),
+    "v_scale": ("batch", "kv_seq", "kv", None),
+    "conv": ("batch", None, "inner"),
+    "ssm": ("batch", "inner", None),
+    "C": ("batch", "heads_nodata", None, None),
+    "n": ("batch", "heads_nodata", None),
+    "m": ("batch", "heads_nodata"),
+    "c": ("batch", "inner"),
+    "h": ("batch", "inner"),
+}
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    """Logical->mesh table for one cell. long_500k (batch=1) turns on
+    sequence sharding over the data axes (context parallelism)."""
+    is_long = shape_name.startswith("long")  # batch=1, decode kind
+    da = data_axes(mesh)
+    r = make_rules(data_axes=da, model_axis="model", fsdp=cfg.fsdp,
+                   seq_on_data=False)
+    # KV-cache sequence axis: shard over "model" (sequence-sharded KV) —
+    # it divides for every arch, unlike kv-head counts (8/20/40 vs 16-way TP),
+    # and it is what keeps 32k/500k caches per-device-resident at 400B scale.
+    # long_500k (batch=1) additionally spreads the cache over the data axes
+    # (context parallelism for the state; activations have no seq at decode).
+    r["kv_seq"] = tuple([*da, "model"]) if is_long else "model"
+    if is_long:
+        r["batch"] = None
+    # kv heads rarely divide the model axis; cache kv-head dim stays local
+    r["kv"] = None
+    return r
+
+
+def _axis_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    axes = assignment if isinstance(assignment, tuple) else (assignment,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop (replicate) any spec entry whose mesh-axis product does not
+    evenly divide the corresponding dim — in_shardings must divide evenly
+    (with_sharding_constraint inside the program may still pad unevenly)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        out.append(e if e is None or dim % _axis_size(mesh, e) == 0 else None)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, shape: tuple, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, sanitize_spec(shape, spec, mesh))
+
+
+def _spec_tree_to_sds(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=named_sharding(mesh, sds.shape, spec)),
+        shape_tree, spec_tree)
+
+
+def cache_specs(cache_tree, rules):
+    def leaf_spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
+        axes = ("layers",) + tuple(axes)  # leading scan-group dim
+        axes = axes[: leaf.ndim] + (None,) * (leaf.ndim - len(axes))
+        return P(*(rules.get(a) if a is not None else None for a in axes))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ModelConfig, ocfg: AdamWConfig,
+                         ccfg: CompressionConfig):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, ocfg, ccfg),
+        jax.random.PRNGKey(0))
+
+
+def train_state_sds(cfg, ocfg, ccfg, mesh, rules):
+    """Sharded SDS tree for the full TrainState. Optimizer moments inherit
+    the param specs (they are elementwise), residuals too; ZeRO-style extra
+    sharding comes from fsdp being part of the param specs themselves."""
+    st = abstract_train_state(cfg, ocfg, ccfg)
+    pspecs = param_specs(st["params"], rules)
+
+    def follow(specs, tree):
+        return jax.tree.map(
+            lambda sp, leaf: sp if leaf.ndim == len(sp) else P(),
+            specs, tree)
+
+    specs = {"params": pspecs,
+             "opt": {"mu": pspecs, "nu": pspecs,
+                     "step": P()},
+             "residuals": follow(pspecs, st["residuals"])}
+    return _spec_tree_to_sds(st, specs, mesh), specs
+
+
+def caches_sds(cfg: ModelConfig, batch: int, max_seq: int, mesh, rules, *,
+               quantized_kv=False):
+    ct = jax.eval_shape(functools.partial(
+        init_caches, cfg, batch, max_seq, quantized_kv=quantized_kv))
+    specs = cache_specs(ct, rules)
+    return _spec_tree_to_sds(ct, specs, mesh), specs
+
+
+def params_sds(cfg: ModelConfig, mesh, rules):
+    pt = abstract_params(cfg)
+    specs = param_specs(pt, rules)
+    return _spec_tree_to_sds(pt, specs, mesh), specs

@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig, BlockSpec, dense_pattern, jamba_pattern, xlstm_pattern
+from repro.models.model import (init_params, train_forward, prefill,
+                                decode_step, init_caches)

@@ -1,0 +1,315 @@
+"""GQA attention: naive and chunked (online-softmax) implementations, KV cache
+(bf16 or F2P8-quantized), RoPE, cross-attention.
+
+Shapes: x [B, S, D]; q [B, S, H, hd]; k/v [B, S, K, hd] with H % K == 0.
+Cache: dict with "k"/"v" [B, K, Smax, hd] (bf16) or F2P8 codes+scales
+("k_codes" [B, K, Smax, hd] uint8, "k_scale" [B, K, Smax, 1] f32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, truncnorm_init
+from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels.f2p_quant import quantize_tile_math, dequantize_tile_math
+
+KV_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
+
+
+def init_attention(key, cfg, cross: bool = False):
+    D, hd, H, K = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    return {"wq": truncnorm_init(ks[0], (D, H * hd), dt),
+            "wk": truncnorm_init(ks[1], (D, K * hd), dt),
+            "wv": truncnorm_init(ks[2], (D, K * hd), dt),
+            "wo": truncnorm_init(ks[3], (H * hd, D), dt)}
+
+
+# ---------------------------------------------------------------------------
+# KV quantization (per-(position, head) scale over the head_dim axis)
+# ---------------------------------------------------------------------------
+def quantize_kv(k):
+    absmax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / KV_FMT.max_value), 1.0)
+    codes = quantize_tile_math((k / scale).astype(jnp.float32), KV_FMT)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_kv(codes, scale, dtype):
+    return (dequantize_tile_math(codes, KV_FMT, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+def _broadcast_kv(k, H):
+    """[B,S,K,hd] -> [B,S,H,hd] by repeating each KV head H//K times.
+
+    Used by the head-sharded attention path (cfg.opt_head_shard): with a
+    single merged head axis GSPMD can shard heads (padding 24->32 when the
+    axis doesn't divide) instead of sharding head_dim and all-reducing the
+    full [Sq,Sk] score tensors."""
+    B, S, K, hd = k.shape
+    G = H // K
+    return jnp.broadcast_to(k[:, :, :, None], (B, S, K, G, hd)).reshape(
+        B, S, H, hd)
+
+
+def _mha_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """Head-sharded attention: q/k/v all [B,S,H,hd], head axis constrained to
+    the model mesh axis; scores stay device-local."""
+    from repro.models.sharding import constrain
+
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    Sq, Sk = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores = constrain(scores / jnp.sqrt(hd), ("batch", "heads", None, None))
+    mask = jnp.zeros((Sq, Sk), jnp.float32)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        mask = jnp.where(jnp.arange(Sk)[None, :] <= qpos, 0.0, -jnp.inf)
+    if kv_len is not None:
+        mask = mask + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, -jnp.inf)
+    probs = jax.nn.softmax(scores + mask, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return constrain(out, ("batch", None, "heads", None))
+
+
+def _mha_chunked(q, k, v, *, causal, chunk, q_offset=0, kv_len=None):
+    """Head-sharded online-softmax attention over KV chunks."""
+    from repro.models.sharding import constrain
+
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nchunk = -(-Sk // chunk)
+    pad = nchunk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        ci, (kb, vb) = inp
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kb).astype(jnp.float32)
+        s = s / jnp.sqrt(hd)
+        kpos = ci * chunk + jnp.arange(chunk)
+        valid = kpos[None, :] < (Sk if kv_len is None else kv_len)
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - safe_m, -jnp.inf))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(q.dtype), vb)
+        acc_new = acc * corr[..., None].astype(q.dtype) + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, hd), q.dtype)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nchunk), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None].astype(q.dtype)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,H,hd], k [B,Sk,K,hd] -> scores [B,K,G,Sq,Sk] (H = K*G)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, Sq, K, H // K, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(probs, v):
+    """probs [B,K,G,Sq,Sk], v [B,Sk,K,hd] -> [B,Sq,H,hd]."""
+    B, K, G, Sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, K * G, -1)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
+    """Full-materialization attention (reference; O(Sq*Sk) memory)."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    mask = jnp.zeros((Sq, Sk), jnp.float32)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = jnp.where(kpos <= qpos, 0.0, -jnp.inf)
+    if kv_len is not None:  # decode: only first kv_len cache slots valid
+        mask = mask + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, -jnp.inf)
+    probs = jax.nn.softmax(scores + mask, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0,
+                      kv_len=None):
+    """Online-softmax attention over KV chunks: O(Sq*chunk) live memory.
+    Matches naive_attention numerically (f32 accumulation)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    nchunk = -(-Sk // chunk)
+    pad = nchunk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, K, G, hd)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        ci, (kb, vb) = inp
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb).astype(jnp.float32)
+        scores = scores / jnp.sqrt(hd)
+        kpos = ci * chunk + jnp.arange(chunk)
+        valid = kpos[None, :] < (Sk if kv_len is None else kv_len)
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - safe_m[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - safe_m, -jnp.inf))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb)
+        acc_new = acc * corr[..., None].astype(q.dtype) + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, K, G, Sq, hd), q.dtype)
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nchunk), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None].astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply
+# ---------------------------------------------------------------------------
+def attention_apply(params, x, cfg, *, mode: str, cache=None, pos_offset=0,
+                    cross_kv=None, causal=True):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, hd)
+
+    if cross_kv is not None:  # cross attention: kv from encoder output
+        k = jnp.einsum("bsd,dh->bsh", cross_kv, params["wk"]).reshape(
+            B, cross_kv.shape[1], K, hd)
+        v = jnp.einsum("bsd,dh->bsh", cross_kv, params["wv"]).reshape(
+            B, cross_kv.shape[1], K, hd)
+        out = _attend(q, k, v, cfg, causal=False)
+        proj = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+        return proj, cache
+
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, K, hd)
+    if cfg.pos == "rope":
+        positions = pos_offset + jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "train":
+        out = _attend(q, k, v, cfg, causal=causal)
+        new_cache = None
+    elif mode == "prefill":
+        new_cache = _cache_write_prefill(cache, k, v)
+        out = _attend(q, k, v, cfg, causal=causal)
+    elif mode == "decode":
+        assert S == 1
+        new_cache = _cache_write_decode(cache, k, v, pos_offset)
+        kc, vc = _cache_read(new_cache, cfg)
+        out = _attend(q, kc, vc, cfg, causal=False, kv_len=pos_offset + 1)
+    else:
+        raise ValueError(mode)
+    proj = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+    return proj, new_cache
+
+
+def _attend(q, k, v, cfg, *, causal, kv_len=None, q_offset=0):
+    if cfg.opt_head_shard:
+        k = _broadcast_kv(k, cfg.n_heads)
+        v = _broadcast_kv(v, cfg.n_heads)
+        if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+            return _mha_chunked(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                                q_offset=q_offset, kv_len=kv_len)
+        return _mha_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              kv_len=kv_len)
+    if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+        return chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                                 q_offset=q_offset, kv_len=kv_len)
+    return naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Cache plumbing
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch, max_seq, quantized: bool, dtype):
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    if quantized:
+        return {"k_codes": jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
+                "k_scale": jnp.ones((batch, max_seq, K, 1), jnp.float32),
+                "v_codes": jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
+                "v_scale": jnp.ones((batch, max_seq, K, 1), jnp.float32)}
+    return {"k": jnp.zeros((batch, max_seq, K, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, K, hd), dtype)}
+
+
+def _cache_write_prefill(cache, k, v):
+    S = k.shape[1]
+    if "k_codes" in cache:
+        kc, ks = quantize_kv(k)
+        vc, vs = quantize_kv(v)
+        return {"k_codes": jax.lax.dynamic_update_slice_in_dim(cache["k_codes"], kc, 0, 1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, 0, 1),
+                "v_codes": jax.lax.dynamic_update_slice_in_dim(cache["v_codes"], vc, 0, 1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, 0, 1)}
+    return {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
+
+
+def _cache_write_decode(cache, k, v, idx):
+    if "k_codes" in cache:
+        kc, ks = quantize_kv(k)
+        vc, vs = quantize_kv(v)
+        upd = jax.lax.dynamic_update_slice_in_dim
+        return {"k_codes": upd(cache["k_codes"], kc, idx, 1),
+                "k_scale": upd(cache["k_scale"], ks, idx, 1),
+                "v_codes": upd(cache["v_codes"], vc, idx, 1),
+                "v_scale": upd(cache["v_scale"], vs, idx, 1)}
+    upd = jax.lax.dynamic_update_slice_in_dim
+    return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
+
+
+def _cache_read(cache, cfg):
+    if "k_codes" in cache:
+        dt = cfg.jnp_dtype
+        k = dequantize_kv(cache["k_codes"], cache["k_scale"], dt)
+        v = dequantize_kv(cache["v_codes"], cache["v_scale"], dt)
+        return k, v
+    return cache["k"], cache["v"]

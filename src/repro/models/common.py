@@ -1,0 +1,81 @@
+"""Shared layer primitives: norms, rope, embeddings, SwiGLU, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncnorm_init(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x, weight, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / (10000 ** (dim / d_model))
+    out = np.zeros((seq, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def swiglu(x, w_gate, w_up, w_down, constrain_ff: bool = True):
+    """Llama-style gated MLP. x [..., D]; w_gate/w_up [D, F]; w_down [F, D].
+
+    constrain_ff=True pins the hidden activations to the "ff" (tensor-
+    parallel) axis — without it GSPMD's solver sometimes all-gathers the
+    [B,S,F] intermediates inside the remat backward. Under sequence
+    parallelism the caller passes False: the FF then runs seq-sharded with
+    weight all-gathers (B*S/d tokens >> F columns makes weights the cheaper
+    thing to move; measured in EXPERIMENTS.md §Perf)."""
+    from repro.models.sharding import constrain
+
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if constrain_ff:
+        g = constrain(g, ("batch", None, "ff"))
+        u = constrain(u, ("batch", None, "ff"))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": truncnorm_init(k1, (d_model, d_ff), dtype),
+            "up": truncnorm_init(k2, (d_model, d_ff), dtype),
+            "down": truncnorm_init(k3, (d_ff, d_model), dtype)}
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Mean token CE in f32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    mask = labels >= 0
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1)

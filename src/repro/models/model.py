@@ -1,0 +1,309 @@
+"""Unified model: init / train forward / prefill / decode for every assigned
+architecture family (dense GQA, MoE, Mamba-hybrid, xLSTM, enc-dec, VLM).
+
+Layers run as lax.scan over `cfg.n_groups` repetitions of `cfg.pattern`
+(heterogeneous stacks stay scannable; HLO size is O(pattern), compile time
+bounded for the 512-device dry-run). Optional remat on the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.common import (rms_norm, sinusoidal_positions,
+                                 softmax_cross_entropy, truncnorm_init,
+                                 init_swiglu, swiglu)
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, spec: BlockSpec, cross: bool):
+    D = cfg.d_model
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": jnp.ones((D,), dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = A.init_attention(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = SSM.init_mamba(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = XL.init_mlstm(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["mixer"] = XL.init_slstm(ks[0], cfg)
+    if cross and spec.mixer == "attn":
+        p["norm_cross"] = jnp.ones((D,), dt)
+        p["cross"] = A.init_attention(ks[1], cfg, cross=True)
+    if spec.ff == "dense":
+        p["norm2"] = jnp.ones((D,), dt)
+        p["ff"] = init_swiglu(ks[2], D, cfg.d_ff, dt)
+    elif spec.ff == "moe":
+        p["norm2"] = jnp.ones((D,), dt)
+        p["ff"] = MOE.init_moe(ks[2], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, khead, kblocks, kenc, kfront = jax.random.split(key, 5)
+    dt = cfg.jnp_dtype
+    D = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": truncnorm_init(kemb, (cfg.vocab_size, D), dt),
+        "final_norm": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncnorm_init(khead, (D, cfg.vocab_size), dt)
+
+    cross = cfg.is_encdec
+
+    def init_group(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return {f"b{i}": _init_block(kk[i], cfg, spec, cross)
+                for i, spec in enumerate(cfg.pattern)}
+
+    gkeys = jax.random.split(kblocks, cfg.n_groups)
+    params["blocks"] = jax.vmap(init_group)(gkeys)
+
+    if cfg.is_encdec:
+        ekeys = jax.random.split(kenc, cfg.encoder_layers)
+        espec = BlockSpec("attn", "dense")
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_block(k, cfg, espec, False))(ekeys),
+            "norm": jnp.ones((D,), dt),
+        }
+    if cfg.frontend == "vision":
+        params["vision_proj"] = truncnorm_init(kfront, (D, D), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _apply_block(p, x, cfg, spec: BlockSpec, *, mode, cache, pos_offset,
+                 cross_kv, causal=True):
+    # sequence parallelism: residual stream is seq-sharded over the model
+    # axis; the norm is per-token so it runs seq-sharded, and the gather to
+    # full-seq happens on the (already normalized) mixer/FF inputs only.
+    sp = cfg.opt_seq_par and mode == "train" and x.shape[1] > 1
+
+    def to_sp(t):
+        return constrain(t, ("batch", "seq_sp", None)) if sp else t
+
+    def to_full(t):
+        return constrain(t, ("batch", None, None)) if sp else t
+
+    x = to_sp(x)
+    h = to_full(rms_norm(x, p["norm1"], cfg.norm_eps))
+    if spec.mixer == "attn":
+        h, new_c = A.attention_apply(p["mixer"], h, cfg, mode=mode,
+                                     cache=cache, pos_offset=pos_offset,
+                                     causal=causal)
+    elif spec.mixer == "mamba":
+        h, new_c = SSM.mamba_apply(p["mixer"], h, cfg, mode=mode, cache=cache)
+    elif spec.mixer == "mlstm":
+        h, new_c = XL.mlstm_apply(p["mixer"], h, cfg, mode=mode, cache=cache)
+    elif spec.mixer == "slstm":
+        h, new_c = XL.slstm_apply(p["mixer"], h, cfg, mode=mode, cache=cache)
+    x = x + to_sp(h)
+    aux = None
+    if "cross" in p and cross_kv is not None:
+        h = to_full(rms_norm(x, p["norm_cross"], cfg.norm_eps))
+        h, _ = A.attention_apply(p["cross"], h, cfg, mode="train",
+                                 cross_kv=cross_kv)
+        x = x + to_sp(h)
+    if spec.ff == "dense":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if not sp:
+            h = to_full(h)
+        h = swiglu(h, p["ff"]["gate"], p["ff"]["up"], p["ff"]["down"],
+                   constrain_ff=not sp)
+        x = x + to_sp(h)
+    elif spec.ff == "moe":
+        h = to_full(rms_norm(x, p["norm2"], cfg.norm_eps))
+        h, aux = MOE.moe_apply(p["ff"], h, cfg, sp=sp)
+        x = x + to_sp(h)
+    if not sp:
+        x = constrain(x, ("batch", "seq", None))
+    return x, new_c, aux
+
+
+def _run_stack(params_blocks, x, cfg, *, mode, caches=None, pos_offset=0,
+               cross_kv=None, causal=True):
+    """Scan the grouped block stack. caches: pytree with leading [G] dims."""
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        gp, gc = xs
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            c = None if gc is None else gc.get(f"b{i}")
+            x, nc, aux = _apply_block(gp[f"b{i}"], x, cfg, spec, mode=mode,
+                                      cache=c, pos_offset=pos_offset,
+                                      cross_kv=cross_kv, causal=causal)
+            if nc is not None:
+                new_caches[f"b{i}"] = nc
+            if aux is not None:
+                aux_sum = aux_sum + aux["aux_loss"]
+        return (x, aux_sum), (new_caches if new_caches else None)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (params_blocks, caches)
+    if caches is None:
+        # scan requires matching leaf structure; use a per-group dummy
+        xs = (params_blocks, None)
+        (x, aux), _ = jax.lax.scan(lambda c, gp: body(c, (gp, None)),
+                                   (x, 0.0), params_blocks)
+        return x, aux, None
+    (x, aux), new_caches = jax.lax.scan(body, (x, 0.0), xs)
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads
+# ---------------------------------------------------------------------------
+def _embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, ("batch", "seq", None))
+
+
+def _cast_grad_to(dtype):
+    """Identity with a backward-pass dtype cast: the f32 loss promotes every
+    upstream cotangent to f32 otherwise (2x bytes on every bwd collective)."""
+
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None), lambda _, g: (g.astype(dtype),))
+    return f
+
+
+def _lm_logits(params, x, cfg):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.opt_bwd_cast:
+        logits = _cast_grad_to(cfg.jnp_dtype)(logits)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _encode(params, frames, cfg):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(cfg.jnp_dtype)
+    x = x + jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model),
+                        cfg.jnp_dtype)
+
+    def body(x, bp):
+        x, _, _ = _apply_block(bp, x, cfg, BlockSpec("attn", "dense"),
+                               mode="train", cache=None, pos_offset=0,
+                               cross_kv=None, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+
+def _maybe_prefix(params, x, batch, cfg):
+    """Prepend vision-patch embeddings (VLM stub frontend)."""
+    if cfg.frontend == "vision" and "patches" in batch:
+        pre = jnp.einsum("bpd,de->bpe", batch["patches"].astype(cfg.jnp_dtype),
+                         params["vision_proj"])
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def train_forward(params, batch, cfg: ModelConfig):
+    """batch: tokens [B,S], labels [B,S] (-1 = masked) (+frames/patches).
+    Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.pos == "sinusoidal":
+        x = x + jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model),
+                            cfg.jnp_dtype)
+    x = _maybe_prefix(params, x, batch, cfg)
+
+    cross_kv = None
+    if cfg.is_encdec:
+        cross_kv = _encode(params, batch["frames"], cfg)
+
+    x, aux_loss, _ = _run_stack(params["blocks"], x, cfg, mode="train",
+                                cross_kv=cross_kv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        pad = -jnp.ones((labels.shape[0], batch["patches"].shape[1]),
+                        labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    logits = _lm_logits(params, x, cfg)
+    loss = softmax_cross_entropy(logits, labels)
+    total = loss + 0.01 * aux_loss
+    return total, {"ce_loss": loss, "aux_loss": aux_loss}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
+                quantized_kv: bool = False):
+    """Cache pytree with leading [G] dim per pattern position."""
+    G = cfg.n_groups
+    dt = cfg.jnp_dtype
+
+    def one(spec: BlockSpec):
+        if spec.mixer == "attn":
+            return A.init_cache(cfg, batch, max_seq, quantized_kv, dt)
+        if spec.mixer == "mamba":
+            return SSM.init_mamba_cache(cfg, batch, dt)
+        if spec.mixer == "mlstm":
+            return XL.init_mlstm_cache(cfg, batch)
+        if spec.mixer == "slstm":
+            return XL.init_slstm_cache(cfg, batch)
+
+    caches = {f"b{i}": one(spec) for i, spec in enumerate(cfg.pattern)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (G,) + x.shape), caches)
+
+
+def prefill(params, batch, cfg: ModelConfig, caches):
+    """Consume the prompt; returns (last-token logits [B,V], caches)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.pos == "sinusoidal":
+        x = x + jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model),
+                            cfg.jnp_dtype)
+    x = _maybe_prefix(params, x, batch, cfg)
+    cross_kv = _encode(params, batch["frames"], cfg) if cfg.is_encdec else None
+    x, _, caches = _run_stack(params["blocks"], x, cfg, mode="prefill",
+                              caches=caches, cross_kv=cross_kv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig, cross_kv=None):
+    """One decode step. token [B,1]; pos scalar int32 (current write index).
+    Returns (logits [B,V], new caches)."""
+    x = _embed_tokens(params, token, cfg)
+    if cfg.pos == "sinusoidal":
+        table = jnp.asarray(sinusoidal_positions(cfg_max_pos(cfg), cfg.d_model),
+                            cfg.jnp_dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
+    x, _, caches = _run_stack(params["blocks"], x, cfg, mode="decode",
+                              caches=caches, pos_offset=pos, cross_kv=cross_kv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, x, cfg)
+    return logits[:, 0], caches
+
+
+def cfg_max_pos(cfg):
+    return 65536  # sinusoidal table bound (whisper decode positions)

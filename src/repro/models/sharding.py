@@ -1,0 +1,167 @@
+"""Logical-axis sharding (MaxText-style).
+
+Models annotate activations with *logical* axis names via `constrain`;
+launchers install a rules table mapping logical names to mesh axes (or None).
+Outside any rules context every constraint is a no-op, so smoke tests and
+single-device runs never touch device state.
+
+Parameter shardings are derived from the param-tree paths by pattern rules
+(`param_specs`), so model init code stays sharding-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_rules():
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: dict[str, Any], mesh: Mesh | None = None):
+    """rules: logical axis name -> mesh axis name | tuple | None. When `mesh`
+    is given, constraints resolve to NamedSharding(mesh, P(...)) — usable
+    inside jit with no ambient mesh context."""
+    prev = (current_rules(), getattr(_STATE, "mesh", None))
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def constrain(x, logical_axes):
+    rules = current_rules()
+    if rules is None:
+        return x
+    axes = logical_axes[-x.ndim:] if len(logical_axes) > x.ndim else \
+        logical_axes + (None,) * (x.ndim - len(logical_axes))
+    spec = P(*(rules.get(a) if a is not None else None for a in axes))
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by path pattern
+# ---------------------------------------------------------------------------
+# leaf-name -> logical axes (without the leading scan "layers" dim; that is
+# added automatically for leaves under "blocks"/"encoder").
+_PARAM_AXES = {
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "vision_proj": (None, "fsdp"),
+    # attention
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "heads"),
+    "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    # dense ff
+    "gate": ("fsdp", "ff"),
+    "up": ("fsdp", "ff"),
+    "down": ("ff", "fsdp"),
+    # moe (3D expert weights; "gate/up/down" under an "ff" dict whose leaves
+    # are 3D are remapped below)
+    "router": ("fsdp", None),
+    # mamba
+    "in_proj": ("fsdp", "inner"),
+    "out_proj": ("inner", "fsdp"),
+    "x_proj": ("inner", None),
+    "dt_proj": (None, "inner"),
+    "dt_bias": ("inner",),
+    "conv_w": (None, "inner"),
+    "conv_b": ("inner",),
+    "a_log": ("inner", None),
+    "d_skip": ("inner",),
+    # xlstm
+    "wqkv": ("fsdp", "inner"),
+    "w_gates": ("fsdp", None),
+    "b_gates": (None,),
+    "w_ogate": ("fsdp", "inner"),
+    "w_in": ("fsdp", "inner"),
+    "r_blocks": ("heads_nodata", None, None),
+    "bias": (None,),
+}
+
+
+def _leaf_axes(path, leaf) -> tuple:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1]
+    in_moe = "ff" in names and leaf.ndim >= 3
+    in_shared = "shared" in names
+    stacked = "blocks" in names
+    if in_moe and name in ("gate", "up", "down"):
+        axes = {"gate": ("experts", "fsdp", "ff_nomodel"),
+                "up": ("experts", "fsdp", "ff_nomodel"),
+                "down": ("experts", "ff_nomodel", "fsdp")}[name]
+    elif in_shared and name in ("gate", "up", "down"):
+        axes = {"gate": ("fsdp", "ff"), "up": ("fsdp", "ff"),
+                "down": ("ff", "fsdp")}[name]
+    elif name.startswith("norm") or name in ("final_norm",):
+        axes = (None,) * leaf.ndim
+        return axes
+    elif name in _PARAM_AXES:
+        axes = _PARAM_AXES[name]
+    else:
+        axes = (None,) * leaf.ndim
+    if stacked:
+        axes = (None,) + tuple(axes)  # leading scan-group dim
+    if len(axes) != leaf.ndim:
+        axes = tuple(axes[: leaf.ndim]) + (None,) * (leaf.ndim - len(axes))
+    return tuple(axes)
+
+
+def param_logical_axes(params):
+    return jax.tree_util.tree_map_with_path(_leaf_axes, params)
+
+
+def param_specs(params, rules: dict[str, Any]):
+    """Pytree of PartitionSpec for the param tree under `rules`."""
+
+    def to_spec(path, leaf):
+        axes = _leaf_axes(path, leaf)
+        return P(*(rules.get(a) if a is not None else None for a in axes))
+
+    return jax.tree_util.tree_map_with_path(to_spec, params)
+
+
+def param_shardings(params, mesh: Mesh, rules: dict[str, Any]):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, rules))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule tables
+# ---------------------------------------------------------------------------
+def make_rules(*, data_axes=("data",), model_axis="model", fsdp: bool,
+               seq_on_data: bool = False) -> dict[str, Any]:
+    """The framework's standard logical->mesh mapping.
+
+    data_axes: mesh axes for the batch (("pod","data") on the multi-pod mesh).
+    fsdp: shard the params' d_model/reduction dim over the data axes too
+          (ZeRO-3-style; XLA inserts per-scan-step all-gathers).
+    seq_on_data: context parallelism for long_500k (batch=1).
+    """
+    da = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return {
+        "batch": None if seq_on_data else da,
+        "seq": da if seq_on_data else None,
+        "seq_sp": model_axis,   # sequence parallelism (residual stream)
+        "vocab": model_axis,
+        "heads": model_axis,
+        "ff": model_axis,
+        "ff_nomodel": None,          # moe expert ff dim (experts take "model")
+        "experts": model_axis,
+        "inner": model_axis,         # mamba/xlstm channel dim
+        "heads_nodata": model_axis,
+        "fsdp": da if fsdp else None,
+        "kv": model_axis,
+    }

@@ -1,0 +1,150 @@
+"""Mamba-1 selective SSM block, TPU-adapted.
+
+The CUDA reference fuses the sequential selective scan into one kernel with
+shared-memory tiling. The TPU-idiomatic equivalent (DESIGN.md §3): a
+*chunked* scan — within a chunk of Q timesteps the recurrence
+    h_t = dA_t * h_{t-1} + dB_t x_t
+is evaluated with jax.lax.associative_scan (log-depth, MXU/VPU friendly);
+across chunks a lax.scan carries h. Live memory is O(B * Q * d_inner * N)
+instead of O(B * S * d_inner * N), and the channel axis (d_inner) shards
+cleanly over the "model" mesh axis (all scan math is per-channel).
+
+Decode is the O(1) recurrent update — this is what makes `long_500k`
+feasible for the hybrid/SSM architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import truncnorm_init
+
+SCAN_CHUNK = 256
+
+
+def init_mamba(key, cfg):
+    D, di, N, C = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(D // 16, 1)
+    ks = jax.random.split(key, 7)
+    dt = cfg.jnp_dtype
+    # S4D-real initialization for A
+    a_init = np.tile(np.arange(1, N + 1, dtype=np.float32), (di, 1))
+    return {
+        "in_proj": truncnorm_init(ks[0], (D, 2 * di), dt),
+        "conv_w": truncnorm_init(ks[1], (C, di), dt, scale=0.1),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": truncnorm_init(ks[2], (di, dt_rank + 2 * N), dt),
+        "dt_proj": truncnorm_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "a_log": jnp.asarray(np.log(a_init)),  # f32 [di, N]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": truncnorm_init(ks[4], (di, D), dt),
+    }
+
+
+def _ssm_params(params, x1, cfg):
+    """x1 [B,S,di] (post conv+silu) -> (dA [B,S,di,N], dBx [B,S,di,N], C [B,S,N])."""
+    N = cfg.ssm_state
+    dt_rank = max(cfg.d_model // 16, 1)
+    xdbc = jnp.einsum("bsd,dr->bsr", x1, params["x_proj"])
+    dt_low, B_, C_ = jnp.split(xdbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))                    # [B,S,di]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))               # [di,N]
+    dA = jnp.exp(dt[..., None] * A)                                 # [B,S,di,N]
+    dBx = (dt * x1.astype(jnp.float32))[..., None] * \
+        B_.astype(jnp.float32)[:, :, None, :]                       # [B,S,di,N]
+    return dA, dBx, C_.astype(jnp.float32)
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Associative scan within one chunk given entry state h0.
+    dA/dBx [B,Q,di,N]; h0 [B,di,N] -> (h_all [B,Q,di,N], h_last)."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(dA, dBx, C_, cfg, h0=None, chunk=SCAN_CHUNK):
+    """Full-sequence scan via chunks. Returns (y [B,S,di], h_last [B,di,N])."""
+    B, S, di, N = dA.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    if S <= chunk:
+        h_all, h_last = _chunk_scan(dA, dBx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, C_)
+        return y, h_last
+    assert S % chunk == 0, f"seq {S} not a multiple of scan chunk {chunk}"
+    nc = S // chunk
+    dAc = dA.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    dBc = dBx.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    Cc = C_.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def body(h, inp):
+        da, db, c = inp
+        h_all, h_next = _chunk_scan(da, db, h)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c)
+        return h_next, y
+
+    h_last, ys = jax.lax.scan(body, h0, (dAc, dBc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y, h_last
+
+
+def _causal_conv(x1, w, b, carry=None):
+    """Depthwise causal conv over seq. x1 [B,S,di]; w [C,di]; carry [B,C-1,di].
+    Returns (out [B,S,di], new_carry)."""
+    C = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x1.shape[0], C - 1, x1.shape[2]), x1.dtype)
+    xp = jnp.concatenate([carry, x1], axis=1)
+    out = jnp.zeros_like(x1)
+    for i in range(C):  # window is tiny (4); unrolled adds, no conv op needed
+        out = out + xp[:, i:i + x1.shape[1]] * w[i]
+    out = out + b
+    new_carry = xp[:, -(C - 1):] if C > 1 else carry
+    return out, new_carry
+
+
+def mamba_apply(params, x, cfg, *, mode: str, cache=None):
+    """x [B,S,D] -> (out [B,S,D], new_cache). Cache: {"conv": [B,C-1,di],
+    "ssm": [B,di,N]} for decode."""
+    B, S, D = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    conv_carry = cache["conv"] if cache is not None else None
+    x1, new_conv = _causal_conv(x1, params["conv_w"], params["conv_b"],
+                                conv_carry)
+    x1 = jax.nn.silu(x1)
+
+    dA, dBx, C_ = _ssm_params(params, x1, cfg)
+    h0 = cache["ssm"] if cache is not None else None
+    if mode == "decode":
+        assert S == 1
+        h = dA[:, 0] * h0 + dBx[:, 0]                  # [B,di,N]
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])[:, None]
+        h_last = h
+    else:
+        y, h_last = selective_scan(dA, dBx, C_, cfg, h0=h0)
+    y = y + params["d_skip"] * x1.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None or mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv, "ssm": h_last}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,218 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel quadratic form for train,
+O(1) recurrent decode) and sLSTM (scalar memory, sequential scan with
+exponential-gating stabilization). Follows Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM parallel form (stabilized):
+    lf_t = logsigmoid(f~_t);  F_t = cumsum(lf)
+    logD[t,s] = F_t - F_s + i~_s   (s <= t, else -inf)
+    m_t = max_s logD[t,s];  D = exp(logD - m_t)
+    S = (Q K^T / sqrt(d)) * D;  out_t = S V / max(|sum_s S[t,s]|, exp(-m_t))
+
+sLSTM recurrence (per head, stabilized):
+    m_t = max(lf_t + m_{t-1}, i~_t)
+    i' = exp(i~ - m_t);  f' = exp(lf + m_{t-1} - m_t)
+    c_t = f' c + i' z;  n_t = f' n + i';  h = o * c / n
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import truncnorm_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunked(q, k, v, i_t, lf, state0=None, chunk=MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q/k/v [B,S,H,hd] (k pre-scaled by 1/sqrt(hd)); i_t/lf [B,S,H] f32.
+    Scans over S/chunk chunks carrying (C [B,H,hd,hd], n [B,H,hd], m [B,H]);
+    within a chunk the quadratic parallel form runs on [B,Q,Q,H] — live
+    memory O(B*Q^2*H) instead of O(B*S^2*H)."""
+    B, S, H, hd = q.shape
+    if S % chunk:
+        chunk = S  # fall back to single chunk for short/ragged sequences
+    nc = S // chunk
+
+    if state0 is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state0["C"], state0["n"], state0["m"]
+
+    def split_chunks(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    qc, kc, vc = split_chunks(q.astype(jnp.float32)), \
+        split_chunks(k.astype(jnp.float32)), split_chunks(v.astype(jnp.float32))
+    ic, lfc = split_chunks(i_t), split_chunks(lf)
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        q, k, v, i_t, lf = inp                        # [B,Q,H,*]
+        Q = q.shape[1]
+        F = jnp.cumsum(lf, axis=1)                    # [B,Q,H]
+        logD = F[:, :, None, :] - F[:, None, :, :] + i_t[:, None, :, :]
+        tpos = jnp.arange(Q)
+        mask = tpos[None, :, None, None] >= tpos[None, None, :, None]
+        logD = jnp.where(mask, logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)               # [B,Q,H]
+        m_inter = F + m0[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+        Dm = jnp.exp(logD - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", q, k) * Dm
+        w_inter = jnp.exp(m_inter - m_t)              # [B,Q,H]
+        num = jnp.einsum("btsh,bshd->bthd", scores, v) + \
+            w_inter[..., None] * jnp.einsum("bthd,bhde->bthe", q, C0)
+        den = scores.sum(axis=2) + w_inter * jnp.einsum("bthd,bhd->bth", q, n0)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # chunk-exit state
+        Ftot = F[:, -1]                               # [B,H]
+        m_src = Ftot[:, None, :] - F + i_t            # [B,Q,H]
+        m_out = jnp.maximum(Ftot + m0, jnp.max(m_src, axis=1))
+        w_s = jnp.exp(m_src - m_out[:, None, :])
+        decay0 = jnp.exp(Ftot + m0 - m_out)
+        C_out = decay0[..., None, None] * C0 + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_s, k, v)
+        n_out = decay0[..., None] * n0 + jnp.einsum("bsh,bshd->bhd", w_s, k)
+        return (C_out, n_out, m_out), h
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, (C, n, m)
+
+
+def init_mlstm(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    E = cfg.mlstm_expand
+    di = E * D
+    ks = jax.random.split(key, 6)
+    dt = cfg.jnp_dtype
+    return {"wqkv": truncnorm_init(ks[0], (D, 3 * di), dt),
+            "w_gates": truncnorm_init(ks[1], (D, 2 * H), dt, scale=0.01),
+            "b_gates": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(dt),
+            "w_ogate": truncnorm_init(ks[2], (D, di), dt),
+            "out_proj": truncnorm_init(ks[3], (di, D), dt)}
+
+
+def mlstm_apply(params, x, cfg, *, mode: str, cache=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = cfg.mlstm_expand * D
+    hd = di // H
+    qkv = jnp.einsum("bsd,de->bse", x, params["wqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, H, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = v.reshape(B, S, H, hd)
+    gates = (jnp.einsum("bsd,dg->bsg", x, params["w_gates"])
+             + params["b_gates"]).astype(jnp.float32)
+    i_t, f_t = jnp.split(gates, 2, axis=-1)            # [B,S,H]
+    lf = jax.nn.log_sigmoid(f_t)
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        m_new = jnp.maximum(lf[:, 0] + m, i_t[:, 0])   # [B,H]
+        ip = jnp.exp(i_t[:, 0] - m_new)
+        fp = jnp.exp(lf[:, 0] + m - m_new)
+        k0, v0, q0 = k[:, 0], v[:, 0], q[:, 0]
+        C = fp[..., None, None] * C + ip[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", k0.astype(jnp.float32),
+                       v0.astype(jnp.float32))
+        n = fp[..., None] * n + ip[..., None] * k0.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", q0.astype(jnp.float32), C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q0.astype(jnp.float32), n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        h = h[:, None].astype(x.dtype)                 # [B,1,H,hd]
+        new_cache = {"C": C, "n": n, "m": m_new}
+    else:
+        h, (C, n, m) = _mlstm_chunked(q, k, v, i_t, lf,
+                                      state0=cache, chunk=MLSTM_CHUNK)
+        h = h.astype(x.dtype)
+        new_cache = {"C": C, "n": n, "m": m} if mode == "prefill" else None
+
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, params["w_ogate"]))
+    out = (h.reshape(B, S, di) * og)
+    return jnp.einsum("bse,ed->bsd", out, params["out_proj"]), new_cache
+
+
+def init_mlstm_cache(cfg, batch):
+    H = cfg.n_heads
+    hd = cfg.mlstm_expand * cfg.d_model // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 3)
+    dt = cfg.jnp_dtype
+    return {"w_in": truncnorm_init(ks[0], (D, 4 * D), dt),
+            "r_blocks": truncnorm_init(ks[1], (H, hd, 4 * hd), dt),
+            "bias": jnp.zeros((4 * D,), dt)}
+
+
+def _slstm_step(params, cfg, state, x_t):
+    """state: (c, n, h, m) each [B, D] f32; x_t [B, D]."""
+    c, n, h, m = state
+    B, D = x_t.shape
+    H = cfg.n_heads
+    hd = D // H
+    pre = jnp.einsum("bd,de->be", x_t, params["w_in"]) + params["bias"]
+    hh = h.reshape(B, H, hd).astype(params["r_blocks"].dtype)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r_blocks"]).reshape(B, 4 * D)
+    z_t, i_t, f_t, o_t = jnp.split((pre + rec).astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(z_t)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, x, cfg, *, mode: str, cache=None):
+    B, S, D = x.shape
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z, z, jnp.full((B, D), -1e30, jnp.float32))
+
+    if mode == "decode":
+        assert S == 1
+        state = _slstm_step(params, cfg, state, x[:, 0])
+        out = state[2][:, None].astype(x.dtype)
+    else:
+        def body(st, x_t):
+            st = _slstm_step(params, cfg, st, x_t)
+            return st, st[2]
+
+        state, hs = jax.lax.scan(body, state, x.transpose(1, 0, 2))
+        out = hs.transpose(1, 0, 2).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None or mode in ("prefill", "decode"):
+        new_cache = {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch):
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, D), -1e30, jnp.float32)}

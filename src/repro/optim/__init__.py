@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, init_state, apply_updates, lr_at
+from repro.optim.compress import (CompressionConfig, compress_decompress,
+                                  init_residuals, compressed_psum, GRAD_FMT)

@@ -1,0 +1,132 @@
+"""F2P gradient compression with error feedback — the paper's format as a
+distributed-training optimization.
+
+Data-parallel gradient exchange is decomposed as
+
+    local grad -> (+ residual) -> F2P8 block-quantize -> psum of DEQUANTIZED
+    shards is replaced by: reduce_scatter(bf16) -> quantize -> all_gather
+    (codes+scales, ~4x fewer bytes than f32 on the gather leg) -> dequantize
+
+and the quantization error (g - dequant(quant(g))) is carried into the next
+step's gradient (error feedback; Karimireddy et al. 2019) so compression
+noise becomes a moving average instead of a bias — SGD/Adam convergence is
+preserved.
+
+Two integration points:
+  * `compress_decompress(g)`: inside-jit round-trip (embedded tile math) used
+    with plain psum — models the numerics exactly on any runner, and is what
+    the quickstart example validates convergence with.
+  * `compressed_psum(g, axis)`: shard_map building block doing the real
+    reduce_scatter/all_gather schedule on a named axis.
+
+Format default: F2P8 SR signed (wide mantissa near zero — gradients are
+short-tailed; paper Table VI shows SR wins on such tensors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
+
+GRAD_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = True
+    fmt: F2PFormat = GRAD_FMT
+    block: int = 128
+    error_feedback: bool = True
+    min_size: int = 4096   # leaves smaller than this stay uncompressed
+
+
+def _roundtrip(x, fmt: F2PFormat, block: int):
+    """quantize+dequantize x (any shape; last axis blocked, padded).
+
+    Only the LAST axis is reshaped: merging sharded leading dims forces
+    GSPMD to all-gather the whole (f32!) tensor just to reflow it — the
+    blocked view (..., n/block, block) keeps every leading-dim sharding."""
+    shape = x.shape
+    n = shape[-1]
+    x32 = x.astype(jnp.float32)
+    pad = (-n) % block
+    if pad:
+        x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
+    xb = x32.reshape(*shape[:-1], -1, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / fmt.max_value), 1.0)
+    codes = quantize_tile_math((xb / scale).astype(jnp.float32), fmt)
+    vals = dequantize_tile_math(codes, fmt, jnp.float32)
+    out = (vals * scale).reshape(*shape[:-1], n + pad)
+    if pad:
+        out = jax.lax.slice_in_dim(out, 0, n, axis=-1)
+    return out
+
+
+def compress_decompress(grads, residuals, ccfg: CompressionConfig):
+    """Error-feedback compression round-trip over a gradient pytree.
+
+    Returns (compressed_grads, new_residuals). With error feedback the
+    residual r accumulates what quantization lost: send q(g + r), keep
+    r' = (g + r) - q(g + r)."""
+    if not ccfg.enabled:
+        return grads, residuals
+
+    def one(g, r):
+        if g.size < ccfg.min_size:
+            return g, r
+        gin = g.astype(jnp.float32) + (r if ccfg.error_feedback else 0.0)
+        q = _roundtrip(gin, ccfg.fmt, ccfg.block)
+        new_r = (gin - q) if ccfg.error_feedback else r
+        return q.astype(g.dtype), new_r
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = td.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def init_residuals(params, ccfg: CompressionConfig):
+    return jax.tree.map(
+        lambda p: (jnp.zeros(p.shape, jnp.float32)
+                   if p.size >= ccfg.min_size else jnp.zeros((), jnp.float32)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# shard_map collective: the actual wire format
+# ---------------------------------------------------------------------------
+def compressed_psum(g: jnp.ndarray, axis_name: str, ccfg: CompressionConfig):
+    """Mean-reduce g over `axis_name` exchanging F2P codes on the gather leg.
+
+    reduce_scatter in input dtype (the summation must stay high precision),
+    then each member quantizes its shard and all_gathers codes + scales:
+    wire bytes = N/W * 4 (scatter, f32) + N * (1 + 4/block) (gather codes)
+    vs 2 * N * 4 for a ring all-reduce in f32."""
+    w = jax.lax.psum(1, axis_name)
+    n = g.shape[0]
+    pad = (-n) % w
+    gp = jnp.pad(g.reshape(n, -1), ((0, pad), (0, 0))) if pad else g.reshape(n, -1)
+    shard = jax.lax.psum_scatter(gp, axis_name, scatter_dimension=0,
+                                 tiled=True) / w
+    # quantize the local shard
+    cols = shard.shape[-1]
+    bpad = (-cols) % ccfg.block
+    sp = jnp.pad(shard, ((0, 0), (0, bpad))) if bpad else shard
+    xb = sp.reshape(sp.shape[0], -1, ccfg.block).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0,
+                      absmax * jnp.float32(1.0 / ccfg.fmt.max_value), 1.0)
+    codes = quantize_tile_math((xb / scale).astype(jnp.float32), ccfg.fmt)
+    # exchange compressed
+    codes_all = jax.lax.all_gather(codes, axis_name, axis=0, tiled=True)
+    scale_all = jax.lax.all_gather(scale, axis_name, axis=0, tiled=True)
+    vals = dequantize_tile_math(codes_all, ccfg.fmt, jnp.float32) * scale_all
+    out = vals.reshape(vals.shape[0], -1)[:, :cols]
+    return out[:n].reshape(g.shape).astype(g.dtype)

@@ -1,0 +1,74 @@
+"""Serving: jittable prefill / decode step factories + a batched request
+engine with (optionally F2P8-quantized) KV cache.
+
+serve_step here is what the decode_* and long_* dry-run shapes lower:
+one new token against a KV cache of `max_seq` (the assignment's definition).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_seq: int
+    quantized_kv: bool = False
+    temperature: float = 0.0   # 0 = greedy
+
+
+def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
+    def prefill_step(params, batch, caches):
+        return prefill(params, batch, cfg, caches)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
+    """serve_step(params, caches, token [B,1], pos) -> (next_token, caches)."""
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = decode_step(params, token, pos, caches, cfg)
+        if scfg.temperature > 0:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), pos)
+            nxt = jax.random.categorical(key, logits / scfg.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return serve_step
+
+
+class Engine:
+    """Minimal batched continuous engine: prefill a batch of prompts, then
+    greedy-decode until max_new or EOS. Host-side loop; each call is jitted."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg, self.scfg, self.params = cfg, scfg, params
+        self._prefill = jax.jit(make_prefill_step(cfg, scfg))
+        self._step = jax.jit(make_serve_step(cfg, scfg))
+
+    def generate(self, prompts: np.ndarray, max_new: int, eos: int = -1):
+        B, S = prompts.shape
+        assert B == self.scfg.batch
+        caches = init_caches(self.cfg, B, self.scfg.max_seq,
+                             quantized_kv=self.scfg.quantized_kv)
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, caches = self._prefill(self.params, batch, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for i in range(max_new - 1):
+            tok, caches = self._step(self.params, caches, tok,
+                                     jnp.int32(S + i))
+            out.append(np.asarray(tok))
+            if eos >= 0 and bool((np.concatenate(out, 1) == eos).any(1).all()):
+                break
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,74 @@
+"""Asynchronous checkpointing: device->host transfer happens synchronously
+(cheap), serialization + fsync run on a background thread so the train loop
+never blocks on disk. At most one write in flight; a newer snapshot that
+arrives while a write is running replaces the queued one (latest-wins), so a
+slow filesystem degrades checkpoint *frequency*, never step time.
+
+Straggler/jitter mitigation at scale: on multi-host deployments only host 0
+writes the (replicated-logical) state; per-host sharded writes would use the
+same queue with per-host files.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint
+
+
+class AsyncCheckpointer:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, compress: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.compress = compress
+        self._lock = threading.Condition()
+        self._pending: tuple[int, Any] | None = None
+        self._busy = False
+        self._stop = False
+        self._errors: list[Exception] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, state: Any):
+        """Snapshot to host (synchronous, fast) and enqueue the write."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        with self._lock:
+            self._pending = (step, host)   # latest-wins
+            self._lock.notify()
+
+    def _worker(self):
+        while True:
+            with self._lock:
+                while self._pending is None and not self._stop:
+                    self._lock.wait()
+                if self._stop and self._pending is None:
+                    return
+                step, host = self._pending
+                self._pending = None
+                self._busy = True
+            try:
+                checkpoint.save(self.dir, step, host, keep=self.keep,
+                                compress=self.compress)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(e)
+            finally:
+                with self._lock:
+                    self._busy = False
+                    self._lock.notify_all()
+
+    def wait(self):
+        """Block until all enqueued writes are durable; re-raise failures."""
+        with self._lock:
+            while self._pending is not None or self._busy:
+                self._lock.wait()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self):
+        with self._lock:
+            self._stop = True
+            self._lock.notify_all()
+        self._thread.join(timeout=60)

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing: atomic writes, K-last retention, optional
+F2P16 payload compression, mesh-agnostic restore.
+
+Layout: <dir>/step_<n>/ with one msgpack index + raw .npy-style buffers.
+Writes go to a tmp dir then os.replace() — a crash mid-write never corrupts
+the latest checkpoint (restore scans for the newest *complete* step).
+
+F2P16 compression (paper-powered): float leaves above `min_size` are stored
+as F2P16-SR codes + per-block f32 scales (~2x smaller than f32, ~same as
+bf16 but with 2.4x lower MSE on short-tailed weight tensors — Table VI).
+Restore dequantizes transparently. Error feedback in the optimizer makes
+training robust to the round-trip (tests/test_train.py exercises
+save->restore->train-on parity).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import struct
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core.f2p import F2PFormat, Flavor
+from repro.core.quantize import block_quantize, block_dequantize
+
+CKPT_FMT = F2PFormat(n_bits=16, h_bits=2, flavor=Flavor.SR, signed=True)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
+         keep: int = 3, block: int = 128, min_size: int = 65536) -> str:
+    """Atomically write `tree` as step_<step>; prune to `keep` newest."""
+    flat, _ = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    index = {}
+    with open(os.path.join(tmp, "data.bin"), "wb") as f:
+        for name, leaf in flat.items():
+            arr = np.asarray(leaf)
+            entry = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            if (compress and arr.dtype.kind == "f" and arr.size >= min_size
+                    and arr.shape and arr.shape[-1] % block == 0):
+                bq = block_quantize(arr.astype(np.float64), CKPT_FMT, block)
+                payload = bq.codes.astype(np.uint16).tobytes()
+                scales = bq.scales.astype(np.float32).tobytes()
+                entry.update(codec="f2p16", block=block,
+                             scale_shape=list(bq.scales.shape))
+                entry["offset"], entry["nbytes"] = f.tell(), len(payload)
+                f.write(payload)
+                entry["scale_offset"], entry["scale_nbytes"] = f.tell(), len(scales)
+                f.write(scales)
+            else:
+                payload = arr.tobytes()
+                entry.update(codec="raw")
+                entry["offset"], entry["nbytes"] = f.tell(), len(payload)
+                f.write(payload)
+            index[name] = entry
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump({"step": step, "leaves": index}, f)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "COMMITTED")):
+            out.append(int(d.split("_", 1)[1]))
+    return out
+
+
+def latest_step(ckpt_dir: str):
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
+            shardings: Any = None):
+    """Restore into the structure of `tree_like`. Mesh-agnostic: leaves are
+    read on host and (optionally) placed onto `shardings` (a matching pytree
+    of NamedSharding), so restarts may use a different mesh shape (elastic
+    rescale)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)["leaves"]
+    flat_like, treedef = _flatten(tree_like)
+    data = np.memmap(os.path.join(d, "data.bin"), dtype=np.uint8, mode="r")
+
+    def read(name, like):
+        e = index[name]
+        raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
+        if e["codec"] == "f2p16":
+            codes = np.frombuffer(raw, np.uint16).reshape(e["shape"])
+            sraw = bytes(data[e["scale_offset"]:e["scale_offset"] + e["scale_nbytes"]])
+            scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
+            from repro.core.quantize import BlockQuantized
+            arr = block_dequantize(BlockQuantized(
+                codes=codes.astype(np.int64), scales=scales,
+                block=e["block"], fmt=CKPT_FMT)).astype(e["dtype"])
+        else:
+            arr = np.frombuffer(raw, e["dtype"]).reshape(e["shape"]).copy()
+        return arr
+
+    flat_out = {}
+    for name, like in flat_like.items():
+        flat_out[name] = read(name, like)
+    leaves = [flat_out[k] for k in flat_like]
+    out = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        out = jax.tree.map(lambda a, s: jax.device_put(a, s), out, shardings)
+    return out, step

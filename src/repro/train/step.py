@@ -1,0 +1,51 @@
+"""Train-step factory: loss + grad + F2P gradient compression + AdamW,
+as one jittable function suitable for pjit lowering on any mesh.
+
+TrainState is a plain dict pytree:
+    {"params", "opt": {"mu","nu","step"}, "residuals"}
+The gradient-compression round-trip runs inside the step (embedded F2P tile
+math; on the wire-level path the same codes ride reduce_scatter/all_gather —
+see optim.compress.compressed_psum)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import train_forward
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.optim.compress import (CompressionConfig, compress_decompress,
+                                  init_residuals)
+
+
+def init_train_state(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                     ccfg: CompressionConfig, key):
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    return {"params": params,
+            "opt": adamw.init_state(params),
+            "residuals": init_residuals(params, ccfg)}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig,
+                    ccfg: CompressionConfig):
+    def train_step(state, batch):
+        def loss_fn(params):
+            loss, metrics = train_forward(params, batch, cfg)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        grads, new_res = compress_decompress(grads, state["residuals"], ccfg)
+        new_params, new_opt, om = adamw.apply_updates(
+            state["params"], grads, state["opt"], ocfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "residuals": new_res}
+        metrics = dict(metrics, loss=loss, **om)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,104 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each arch instantiates its REDUCED same-family config and runs one train
+step + one prefill/decode on CPU, asserting output shapes and no NaNs.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, full_config, smoke_config, SHAPES, \
+    shape_is_applicable
+from repro.models import (decode_step, init_caches, init_params, prefill,
+                          train_forward)
+from repro.optim import AdamWConfig, CompressionConfig
+from repro.train import init_train_state, make_train_step
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One full optimizer step on the reduced config: finite loss + grads."""
+    cfg = smoke_config(arch)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    ccfg = CompressionConfig(enabled=True, min_size=512)
+    state = init_train_state(cfg, ocfg, ccfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, ocfg, ccfg))
+    batch = _batch_for(cfg)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # one more step must change the loss (optimizer actually applied)
+    _, m2 = step(state, batch)
+    assert float(m2["loss"]) != float(metrics["loss"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    loss, metrics = train_forward(params, batch, cfg)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 12
+    batch = _batch_for(cfg, B=B, S=S)
+    caches = init_caches(cfg, B, 32)
+    logits, caches = prefill(params, {k: v for k, v in batch.items()
+                                      if k != "labels"}, cfg, caches)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    lg, _ = decode_step(params, tok, jnp.int32(S), caches, cfg)
+    assert lg.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_constructs(arch):
+    """The exact assigned config builds and self-reports sane sizes —
+    without allocating a single parameter."""
+    cfg = full_config(arch)
+    n = cfg.param_count()
+    assert n > 5e7
+    # shape applicability matrix is well-defined for all four shapes
+    for s in SHAPES:
+        ok, why = shape_is_applicable(cfg, s)
+        assert ok or why
+
+
+def test_assigned_sizes_match_names():
+    """Analytic param counts land near the advertised scales."""
+    expect = {"llama4_maverick_400b": (380e9, 420e9),
+              "jamba_1_5_large": (380e9, 420e9),
+              "llama4_scout_17b": (95e9, 120e9),
+              "xlstm_125m": (0.08e9, 0.15e9),
+              "llama3_2_3b": (3e9, 4.5e9)}
+    for arch, (lo, hi) in expect.items():
+        n = full_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_long500k_applicability_matrix():
+    subq = {a: full_config(a).is_subquadratic for a in ARCH_IDS}
+    assert subq["jamba_1_5_large"] and subq["xlstm_125m"]
+    assert sum(subq.values()) == 2  # exactly the hybrid + ssm archs

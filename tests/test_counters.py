@@ -1,0 +1,71 @@
+"""Tests for the approximate-counter substrate (paper Sec. III-A)."""
+import numpy as np
+import pytest
+
+from repro.core import counters as C
+from repro.core.f2p import F2PFormat, Flavor
+
+
+def test_grids_monotone():
+    for g in [C.f2p_li_grid(8), C.f2p_si_grid(8), C.sead_grid(8),
+              C.morris_grid(8, 30.0), C.cedar_grid(8, 0.1)]:
+        assert np.all(np.diff(g) > 0)
+        assert g[0] == 0.0
+
+
+def test_tune_morris_reaches_target():
+    target = C.f2p_li_grid(8)[-1]
+    a = C.tune_morris(8, target)
+    assert C.morris_grid(8, a)[-1] >= target
+    # a bit larger `a` must NOT reach (tightness of the search)
+    assert C.morris_grid(8, a * 1.01)[-1] < target
+
+
+def test_tune_cedar_reaches_target():
+    target = C.f2p_li_grid(8)[-1]
+    d = C.tune_cedar(8, target)
+    assert C.cedar_grid(8, d)[-1] >= target
+    assert C.cedar_grid(8, d * 0.99)[-1] < target
+
+
+def test_on_arrival_mse_exact_counter_is_zero():
+    """A grid counting 0..K with step 1 makes no error while in range."""
+    g = np.arange(1025, dtype=np.float64)
+    mse = C.on_arrival_mse(g, 1024, trials=2)
+    assert mse == 0.0
+
+
+def test_on_arrival_mse_unbiasedness_scale():
+    """MSE of F2P_LI^2 at 8 bits should be far below SEAD's (paper Table V)."""
+    nbits = 8
+    gf = C.f2p_li_grid(nbits)
+    S = int(gf[-1])
+    mse_f2p = C.on_arrival_mse(gf, S, trials=8, seed=1)
+    mse_sead = C.on_arrival_mse(C.sead_grid(nbits), S, trials=8, seed=1)
+    assert mse_f2p < mse_sead / 10  # paper: 124x at 8 bits
+
+
+def test_on_arrival_saturation():
+    g = np.array([0.0, 1.0, 2.0])  # saturates at 2
+    mse = C.on_arrival_mse(g, 10, trials=1)
+    # after 2 arrivals counter pegs at 2; errors (2-i)^2 for i=3..10
+    want = sum((2 - i) ** 2 for i in range(3, 11)) / 10
+    assert mse == pytest.approx(want)
+
+
+def test_counter_array_bulk_unbiased():
+    grid = C.f2p_li_grid(8)
+    arr = C.CounterArray(64, grid, seed=3)
+    n = 5000
+    arr.add(np.arange(64), np.full(64, n))
+    est = arr.estimates()
+    # unbiased-ish: mean of 64 counters within 5% of truth
+    assert abs(est.mean() - n) / n < 0.05
+
+
+def test_counter_array_incremental_matches_range():
+    arr = C.CounterArray(4, np.arange(100, dtype=np.float64))
+    for _ in range(50):
+        arr.add(np.array([0, 1]))
+    assert np.all(arr.estimates()[:2] == 50)
+    assert np.all(arr.estimates()[2:] == 0)

@@ -1,0 +1,146 @@
+"""Bit-exact tests of the F2P reference implementation against the paper.
+
+Table III of the paper gives worked 6-bit examples (H=2) for all four flavors;
+these tests pin our decode to those exact values, plus structural invariants.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.f2p import F2PFormat, Flavor
+
+
+def _f(flavor, n=6, h=2, signed=False):
+    return F2PFormat(n_bits=n, h_bits=h, flavor=flavor, signed=signed)
+
+
+# --- paper Table III: (code, SR, LR, SI, LI) for 6-bit, H=2 ------------------
+TABLE3 = [
+    # code      F2P_SR^2        F2P_LR^2   F2P_SI^2  F2P_LI^2
+    (0b000000, 0.0,             128,       0,        16384),
+    (0b000001, 1 / 2048,        136,       1,        17408),
+    (0b001111, 15 / 2048,       248,       15,       31744),
+    (0b010000, 16 / 2048,       64,        16,       8192),
+    (0b010001, 18 / 2048,       72,        18,       9216),
+    (0b010111, 30 / 2048,       120,       30,       15360),
+    (0b011000, 32 / 2048,       32,        32,       4096),
+    (0b111100, 32.0,            1 / 64,    65536,    2),
+    (0b111110, 64.0,            0.0,       131072,   0),
+    (0b111111, 96.0,            1 / 128,   196608,   1),
+]
+
+
+@pytest.mark.parametrize("col,flavor", [(1, Flavor.SR), (2, Flavor.LR),
+                                        (3, Flavor.SI), (4, Flavor.LI)])
+def test_table3_decode(col, flavor):
+    fmt = _f(flavor)
+    codes = np.array([row[0] for row in TABLE3])
+    want = np.array([row[col] for row in TABLE3], dtype=np.float64)
+    got = fmt.decode(codes)
+    np.testing.assert_array_equal(got, want, err_msg=str(fmt))
+
+
+def test_biases_match_paper():
+    # paper Sec. II-D/II-E worked constants for 6-bit H=2
+    assert _f(Flavor.SR).bias == -8
+    assert _f(Flavor.LR).bias == 7
+    assert _f(Flavor.SI).bias == 3
+    assert _f(Flavor.LI).bias == 14
+    assert _f(Flavor.SR).vmax == 15
+
+
+def test_vmax_eq4():
+    assert F2PFormat(8, 1, Flavor.SR).vmax == 3
+    assert F2PFormat(8, 2, Flavor.SR).vmax == 15
+    assert F2PFormat(12, 3, Flavor.SR).vmax == 255
+
+
+ALL_FMTS = [
+    F2PFormat(n, h, fl, signed)
+    for fl in Flavor
+    for (n, h) in [(6, 2), (8, 1), (8, 2), (10, 2), (12, 3), (16, 2), (16, 1)]
+    for signed in (False, True)
+]
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_grid_strictly_increasing_and_complete(fmt):
+    g = fmt.payload_grid
+    assert len(g) == 1 << fmt.payload_bits
+    assert np.all(np.diff(g) > 0)
+    assert g[0] == 0.0  # zero always representable (subnormal with m=0)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_integer_flavors_are_integers(fmt):
+    if fmt.flavor.is_integer:
+        g = fmt.payload_grid
+        np.testing.assert_array_equal(g, np.round(g), err_msg=str(fmt))
+        # smallest positive value must be exactly 1 (paper Eq. 5)
+        assert fmt.min_positive == 1.0
+        # bottom of the range counts with step exactly 1:
+        #  SI: through the subnormal range [0, 2^(Nu-H)]
+        #     (paper Table III: SI goes 0,1,...,15,16 then 18)
+        #  LI: through [0, 2^(Mmin+1)] with Mmin = Nu-H-2^H+1 (paper Eq. 9)
+        #     (paper Table III: LI represents 0,1,2 with step 1, then 4,6,...)
+        if fmt.flavor == Flavor.SI:
+            k = (1 << (fmt.payload_bits - fmt.h_bits)) + 1
+        else:
+            k = (1 << (fmt.payload_bits - fmt.h_bits - (1 << fmt.h_bits) + 2)) + 1
+        np.testing.assert_array_equal(g[:k], np.arange(k, dtype=np.float64))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_encode_decode_roundtrip_exact(fmt):
+    """Every representable value encodes to a code that decodes back to itself."""
+    g = fmt.grid
+    codes = fmt.encode_nearest(g)
+    np.testing.assert_array_equal(fmt.decode(codes), g, err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_quantize_error_bounded_by_half_gap(fmt):
+    rng = np.random.default_rng(0)
+    lo, hi = (fmt.min_value, fmt.max_value)
+    x = rng.uniform(lo, hi, size=2048)
+    q = fmt.quantize_value(x)
+    g = fmt.grid
+    idx = np.clip(np.searchsorted(g, x), 1, len(g) - 1)
+    half_gap = (g[idx] - g[idx - 1]) / 2.0
+    assert np.all(np.abs(q - x) <= half_gap + 1e-12), str(fmt)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_out_of_range_clamps(fmt):
+    big = np.array([fmt.max_value * 4, -fmt.max_value * 4])
+    q = fmt.quantize_value(big)
+    assert q[0] == fmt.max_value
+    assert q[1] == (-fmt.max_value if fmt.signed else 0.0)
+
+
+@given(x=st.floats(min_value=-1e6, max_value=1e6, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_property_quantize_idempotent(x):
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    q1 = fmt.quantize_value(np.array([x]))
+    q2 = fmt.quantize_value(q1)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@given(
+    n=st.integers(min_value=6, max_value=16),
+    h=st.integers(min_value=1, max_value=2),
+    fl=st.sampled_from(list(Flavor)),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_nearest_is_nearest(n, h, fl):
+    """encode_nearest really returns the closest grid point (ties -> larger |.|)."""
+    fmt = F2PFormat(n, h, fl)
+    rng = np.random.default_rng(n * 100 + h)
+    x = rng.uniform(0, fmt.max_value * 1.01, size=256)
+    q = fmt.quantize_value(x)
+    g = fmt.payload_grid
+    # brute force nearest
+    d = np.abs(g[None, :] - x[:, None])
+    best = d.min(axis=1)
+    np.testing.assert_allclose(np.abs(q - x), best, rtol=0, atol=1e-9)

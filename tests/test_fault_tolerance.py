@@ -1,0 +1,72 @@
+"""Fault-tolerance integration tests: simulated preemption + elastic restart
+through the REAL launcher (subprocesses), and the async checkpointer."""
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _launch(args, ndev):
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        env=env, capture_output=True, text=True, cwd=ROOT, timeout=540)
+
+
+def test_preemption_and_elastic_restart(tmp_path):
+    """Kill training mid-run (hard exit), restart on a DIFFERENT mesh shape,
+    and finish: the final loss stream must continue from the checkpoint."""
+    ckpt = str(tmp_path / "ck")
+    common = ["--arch", "xlstm_125m", "--steps", "30", "--ckpt-every", "10",
+              "--ckpt-dir", ckpt, "--seq", "64", "--global-batch", "4"]
+
+    r1 = _launch(common + ["--mesh-shape", "2,2", "--die-at-step", "25"], 4)
+    assert r1.returncode == 42, r1.stderr[-2000:]
+    assert "SIMULATED PREEMPTION" in r1.stdout
+
+    # elastic: restart on a 2x1 mesh
+    r2 = _launch(common + ["--mesh-shape", "2,1"], 2)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 20" in r2.stdout, r2.stdout
+    assert "done." in r2.stdout
+
+
+def test_async_checkpointer_latest_wins_and_durable(tmp_path):
+    from repro.train import checkpoint
+    from repro.train.async_ckpt import AsyncCheckpointer
+
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    ck = AsyncCheckpointer(d, keep=2, compress=False)
+    for step in range(5):
+        ck.save(step, {"w": jnp.full((32,), float(step))})
+    ck.wait()
+    last = checkpoint.latest_step(d)
+    assert last == 4
+    restored, _ = checkpoint.restore(d, {"w": jnp.zeros((32,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((32,), 4.0))
+    ck.close()
+
+
+def test_async_checkpointer_never_blocks_train_thread(tmp_path):
+    from repro.train.async_ckpt import AsyncCheckpointer
+
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    ck = AsyncCheckpointer(d, keep=1, compress=False)
+    big = {"w": jnp.ones((1024, 1024))}
+    t0 = time.perf_counter()
+    ck.save(0, big)
+    enqueue_time = time.perf_counter() - t0
+    assert enqueue_time < 0.5  # device->host snapshot only
+    ck.wait()
+    ck.close()

@@ -1,0 +1,158 @@
+"""Per-kernel tests: Pallas (interpret=True) vs pure-jnp/numpy oracles.
+
+Sweeps shapes x dtypes x formats and asserts bit-exact code equality and
+exact dequant agreement, per the contract in kernels/ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels import f2p_quant as K
+from repro.kernels import ops, ref
+
+FMTS = [
+    F2PFormat(8, 2, Flavor.SR, signed=True),
+    F2PFormat(8, 2, Flavor.LR, signed=True),
+    F2PFormat(8, 1, Flavor.SR, signed=True),
+    F2PFormat(8, 2, Flavor.SI, signed=False),
+    F2PFormat(8, 2, Flavor.LI, signed=False),
+    F2PFormat(16, 2, Flavor.SR, signed=True),
+    F2PFormat(16, 1, Flavor.LR, signed=True),
+    F2PFormat(16, 2, Flavor.LI, signed=False),
+]
+SHAPES = [(8, 128), (8, 512), (32, 256), (128, 1024), (8, 384)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(shape, dtype, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, scale, size=shape).astype(np.float32)
+    # sprinkle exact zeros, negatives, tiny and large magnitudes
+    x.flat[:: 7] = 0.0
+    x.flat[3::11] *= 1e-3
+    x.flat[5::13] *= 1e3
+    return jnp.asarray(x, dtype=dtype)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=str)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_pallas_quantize_matches_ref(fmt, shape):
+    x = _data(shape, jnp.float32)
+    codes_k, scales_k = K.f2p_quantize_pallas(x, fmt, interpret=True)
+    codes_r, scales_r = ref.quantize_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(scales_k), np.asarray(scales_r))
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r),
+                                  err_msg=f"{fmt} {shape}")
+
+
+@pytest.mark.parametrize("fmt", FMTS[:4], ids=str)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pallas_quantize_dtypes(fmt, dtype):
+    x = _data((16, 512), dtype)
+    codes_k, scales_k = K.f2p_quantize_pallas(x, fmt, interpret=True)
+    codes_r, scales_r = ref.quantize_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=str)
+def test_pallas_dequantize_matches_ref(fmt):
+    x = _data((16, 512), jnp.float32, seed=2)
+    codes, scales = ref.quantize_ref(x, fmt)
+    y_k = K.f2p_dequantize_pallas(codes, scales, fmt, interpret=True)
+    y_r = ref.dequantize_ref(codes, scales, fmt)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r), err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=str)
+def test_tile_math_encode_matches_numpy_exact(fmt):
+    """The branch-free arithmetic encode == core.f2p searchsorted encode,
+    code-for-code, on raw (unscaled) in-range values."""
+    rng = np.random.default_rng(5)
+    lim = min(fmt.max_value, 1e30)
+    x = rng.uniform(-lim if fmt.signed else 0, lim, size=4096).astype(np.float32)
+    x[::17] = 0.0
+    got = np.asarray(K.quantize_tile_math(jnp.asarray(x), fmt))
+    want = fmt.encode_nearest(x.astype(np.float64))
+    np.testing.assert_array_equal(got, want, err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=str)
+def test_tile_math_decode_matches_numpy_exact(fmt):
+    codes = np.arange(1 << fmt.n_bits, dtype=np.uint16 if fmt.n_bits > 8 else np.uint8)
+    got = np.asarray(K.dequantize_tile_math(jnp.asarray(codes), fmt))
+    want = fmt.decode(codes.astype(np.int64)).astype(np.float32)
+    np.testing.assert_array_equal(got, want, err_msg=str(fmt))
+
+
+def test_tile_math_roundtrip_all_codes():
+    """encode(decode(code)) == code for every code of every format (the kernel
+    even preserves the sign of -0.0 through the round trip)."""
+    for fmt in FMTS:
+        codes = np.arange(1 << fmt.n_bits, dtype=np.uint16)
+        vals = K.dequantize_tile_math(jnp.asarray(codes), fmt)
+        back = np.asarray(K.quantize_tile_math(vals, fmt), dtype=np.uint16)
+        np.testing.assert_array_equal(back, codes, err_msg=str(fmt))
+
+
+def test_pow2_scale_mode_deterministic_and_exact():
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    x = _data((8, 256), jnp.float32, seed=9)
+    codes_k, scales_k = K.f2p_quantize_pallas(x, fmt, interpret=True,
+                                              scale_mode="pow2")
+    codes_r, scales_r = ref.quantize_ref(x, fmt, scale_mode="pow2")
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    # scales are powers of two
+    s = np.asarray(scales_k)
+    np.testing.assert_array_equal(s, np.exp2(np.round(np.log2(s))))
+
+
+def test_ops_qtensor_arbitrary_rank_and_padding():
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    for shape in [(3, 5, 100), (7, 130), (1000,)]:
+        x = _data(shape, jnp.float32, seed=11)
+        qt = ops.f2p_quantize(x, fmt, block=128)
+        y = qt.dequantize()
+        assert y.shape == x.shape
+        # error bound: per-block scale * max gap / 2
+        err = np.abs(np.asarray(y) - np.asarray(x))
+        assert err.max() <= np.asarray(x).__abs__().max() / fmt.max_value * \
+            np.max(np.diff(fmt.grid)) / 2 + 1e-6
+
+
+def test_ops_inside_jit_matches_pallas():
+    """The jit-embedded tile-math path produces identical codes to Pallas."""
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    x = _data((8, 256), jnp.float32, seed=13)
+
+    @jax.jit
+    def roundtrip(x):
+        qt = ops.f2p_quantize(x, fmt, use_pallas=False)
+        return qt.codes, qt.dequantize()
+
+    codes_j, y_j = roundtrip(x)
+    codes_p, scales_p = K.f2p_quantize_pallas(x, fmt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(codes_j)[:8, :256], np.asarray(codes_p))
+
+
+def test_quantize_tree_passthrough_small():
+    fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    tree = {"w": jnp.ones((64, 128)), "b": jnp.ones((16,))}
+    qt = ops.quantize_tree(tree, fmt, min_size=1024)
+    assert isinstance(qt["w"], ops.QTensor)
+    assert isinstance(qt["b"], jnp.ndarray)
+    back = ops.dequantize_tree(qt)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.ones((64, 128)), atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), col=st.sampled_from([128, 256, 384]))
+@settings(max_examples=25, deadline=None)
+def test_property_kernel_vs_ref_random(seed, col):
+    fmt = F2PFormat(8, 2, Flavor.LR, signed=True)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_cauchy((8, col)).astype(np.float32))
+    ck, sk = K.f2p_quantize_pallas(x, fmt, interpret=True)
+    cr, sr = ref.quantize_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))

@@ -1,0 +1,79 @@
+"""The §Perf variants must be pure performance changes: identical (or
+float-tolerance-identical) numerics vs the baseline paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import init_params, train_forward
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models import attention as A
+
+
+BASE = ModelConfig(name="v", n_layers=2, d_model=64, n_heads=6, n_kv_heads=2,
+                   d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+def _loss_and_grads(cfg, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loss, _ = train_forward(params, batch, cfg)
+    g = jax.grad(lambda p: train_forward(p, batch, cfg)[0])(params)
+    return float(loss), g
+
+
+def test_head_shard_attention_matches_gqa():
+    """Broadcast-KV merged-head attention == grouped GQA attention."""
+    rng = np.random.default_rng(0)
+    B, S, H, K, hd = 2, 24, 6, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    out_gqa = A.naive_attention(q, k, v, causal=True)
+    kb, vb = A._broadcast_kv(k, H), A._broadcast_kv(v, H)
+    out_mha = A._mha_attention(q, kb, vb, causal=True)
+    np.testing.assert_allclose(np.asarray(out_mha), np.asarray(out_gqa),
+                               rtol=1e-5, atol=1e-5)
+    out_mha_c = A._mha_chunked(q, kb, vb, causal=True, chunk=8)
+    np.testing.assert_allclose(np.asarray(out_mha_c), np.asarray(out_gqa),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("knobs", [
+    dict(opt_head_shard=True),
+    dict(opt_seq_par=True),
+    dict(opt_head_shard=True, opt_seq_par=True, attn_impl="chunked",
+         attn_chunk=8),
+], ids=["head_shard", "seq_par", "all"])
+def test_variant_loss_matches_baseline(knobs):
+    """On one device (constraints are no-ops) every variant is numerically
+    the baseline up to f32 reduction-order noise."""
+    l0, g0 = _loss_and_grads(BASE)
+    l1, g1 = _loss_and_grads(dataclasses.replace(BASE, **knobs))
+    assert abs(l0 - l1) < 1e-4, (l0, l1)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_bwd_cast_grads_close():
+    """opt_bwd_cast changes only the cotangent dtype at the loss boundary;
+    f32-model grads must be identical (cast is a no-op at f32)."""
+    l0, g0 = _loss_and_grads(BASE)
+    l1, g1 = _loss_and_grads(dataclasses.replace(BASE, opt_bwd_cast=True))
+    assert l0 == l1
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_sp_flag_preserves_output():
+    cfg = dataclasses.replace(BASE, pattern=(BlockSpec("attn", "moe"),),
+                              n_experts=4, experts_per_token=2,
+                              n_shared_experts=1, capacity_factor=2.0)
+    l0, _ = _loss_and_grads(cfg)
+    l1, _ = _loss_and_grads(dataclasses.replace(cfg, opt_seq_par=True))
+    assert abs(l0 - l1) < 1e-4
