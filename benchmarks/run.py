@@ -1,8 +1,17 @@
 """Benchmark harness — one function per paper table/figure plus framework
-micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows and dumps the
-full tables to benchmarks/out/.
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows, dumps the
+full tables to benchmarks/out/, and appends a kernel-timing entry to
+``benchmarks/BENCH_kernels.json`` — the perf trajectory file later PRs
+compare against.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--warmup N] [--reps N]
+                                            [--only table5,kernels,...]
+
+Timing honesty: JAX dispatch is ASYNCHRONOUS — returning from a jitted call
+only proves the work was enqueued. Every measurement here synchronizes with
+``block_until_ready`` on the result tree before the clock stops (the seed
+harness didn't, so its Pallas "us_per_call" numbers measured dispatch, not
+execution — off by >100x; see CHANGES.md).
 """
 from __future__ import annotations
 
@@ -13,72 +22,142 @@ import time
 
 import numpy as np
 
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_kernels.json")
 
-def _t(fn, *args, reps=3, **kw):
-    fn(*args, **kw)  # warmup / compile
+
+def _sync(out):
+    """Block until every jax array in ``out`` is computed (no-op for numpy).
+
+    Walks the full pytree: results like QTensor are registered pytrees whose
+    leaves are jax arrays, but the container itself has no
+    ``block_until_ready`` — a shallow isinstance check would silently skip
+    them and time async dispatch instead of execution."""
+    try:
+        import jax
+
+        leaves = jax.tree_util.tree_leaves(out)
+    except ImportError:  # pure-numpy bench environment
+        leaves = out if isinstance(out, (tuple, list)) else [out]
+    for leaf in leaves:
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+def timeit(fn, *args, warmup=1, reps=3, **kw):
+    """us per call of ``fn``, synchronized: the clock stops only after
+    block_until_ready on the result. Returns (us_per_call, last_result)."""
+    for _ in range(warmup):  # compile + cache warm
+        _sync(fn(*args, **kw))
+    reps = max(reps, 1)
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args, **kw)
+        out = _sync(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def bench_table5(quick=False):
+def bench_table5(quick=False, **_):
+    # one warmup (first call pays ~40ms of import/allocator cold-start),
+    # one timed rep: a deterministic numpy batch job, variance is low
     from benchmarks.paper_tables import table5_counters
 
     widths = (8, 10) if quick else (8, 10, 12, 14, 16)
-    us, rows = _t(table5_counters, widths, 4 if quick else 12, reps=1)
+    us, rows = timeit(table5_counters, widths, 4 if quick else 12,
+                      warmup=1, reps=1)
     worst_f2p = max(r["F2P_LI^2"] for r in rows.values())
     print(f"table5_counters,{us:.0f},f2p_norm_max={worst_f2p:.3f}")
-    return {str(k): v for k, v in rows.items()}
+    return {"us": us, "rows": {str(k): v for k, v in rows.items()}}
 
 
-def bench_table6(quick=False):
+def bench_table6(quick=False, **_):
+    # single-shot: seconds-long deterministic numpy jobs — the ~40ms
+    # cold-start is noise here and warmup would double a long wall time
     from benchmarks.paper_tables import table6_quant
 
     out = {}
     for nbits in (8, 16, 19):
-        us, rows = _t(table6_quant, nbits, reps=1)
+        us, rows = timeit(table6_quant, nbits, warmup=0, reps=1)
         best = {m: min(r, key=r.get) for m, r in rows.items()}
         f2p_wins = sum(v.startswith("F2P") for v in best.values())
         print(f"table6_quant_{nbits}b,{us:.0f},f2p_best_on={f2p_wins}/4")
-        out[str(nbits)] = rows
+        out[str(nbits)] = {"us": us, "rows": rows}
     return out
 
 
-def bench_fig1():
+def bench_fig1(quick=False, **_):
     from benchmarks.paper_tables import fig1_grids
 
-    us, rows = _t(fig1_grids, reps=1)
+    us, rows = timeit(fig1_grids, warmup=0, reps=1)
     print(f"fig1_grids,{us:.0f},"
           f"f2p_sr_decades={rows['F2P_SR^2']['range_decades']:.1f}")
     return rows
 
 
-def bench_kernels(quick=False):
-    import jax
+def bench_host_encode(quick=False, warmup=1, reps=3):
+    """Closed-form numpy encode vs the grid+searchsorted oracle (this PR's
+    headline host-path speedup; the oracle survives for tests only)."""
+    from repro.core.f2p import F2PFormat, Flavor
+
+    rng = np.random.default_rng(0)
+    n = 200_000 if quick else 1_000_000
+    x = rng.normal(0, 0.05, size=n)
+    out = {}
+    for nbits in (8, 16, 19):
+        fmt = F2PFormat(nbits, 2, Flavor.SR, signed=True)
+        us_cf, _ = timeit(fmt.encode_nearest, x, warmup=warmup, reps=reps)
+        us_grid, _ = timeit(fmt.encode_nearest_grid, x, warmup=warmup,
+                            reps=reps)
+        print(f"host_encode_{nbits}b_1M,{us_cf:.0f},"
+              f"speedup_vs_grid={us_grid / us_cf:.1f}x")
+        out[str(nbits)] = {"closed_form_us": us_cf, "grid_oracle_us": us_grid,
+                           "n_elems": n}
+    return out
+
+
+def bench_kernels(quick=False, warmup=1, reps=3):
+    """Kernel paths through the dispatch registry, honestly synchronized."""
     import jax.numpy as jnp
 
     from repro.core.f2p import F2PFormat, Flavor
+    from repro.kernels import dispatch, ops
     from repro.kernels import f2p_quant as K
 
     fmt = F2PFormat(8, 2, Flavor.SR, signed=True)
+    shape = (256, 1024)
     x = jnp.asarray(np.random.default_rng(0).normal(
-        size=(256, 1024)).astype(np.float32))
-    us, (codes, scales) = _t(
-        lambda: K.f2p_quantize_pallas(x, fmt, interpret=True), reps=2)
-    print(f"pallas_quantize_256x1024,{us:.0f},interpret=True")
-    us2, _ = _t(lambda: K.f2p_dequantize_pallas(codes, scales, fmt,
-                                                interpret=True), reps=2)
-    print(f"pallas_dequantize_256x1024,{us2:.0f},interpret=True")
-    # jit-embedded tile math (the in-graph path)
-    tm = jax.jit(lambda x: K.quantize_tile_math(x, fmt))
-    us3, _ = _t(lambda: tm(x).block_until_ready(), reps=5)
-    print(f"jit_tile_math_encode_256x1024,{us3:.0f},"
-          f"gbps={x.size*4/us3/1e3:.2f}")
-    return {"quantize_us": us, "dequantize_us": us2, "jit_encode_us": us3}
+        size=shape).astype(np.float32))
+    nbytes = x.size * 4
+    out = {"shape": list(shape), "default_backend": dispatch.resolve_backend()}
+
+    backends = ["xla", "pallas_interpret"]
+    if dispatch.pallas_variant() == dispatch.PALLAS:
+        backends.append("pallas")
+    if quick:
+        backends = [b for b in backends if b != "pallas_interpret"]
+    for b in backends:
+        q_us, qt = timeit(ops.f2p_quantize, x, fmt, backend=b,
+                          warmup=warmup, reps=reps)
+        dq_us, _ = timeit(qt.dequantize, backend=b, warmup=warmup, reps=reps)
+        print(f"quantize_{b}_256x1024,{q_us:.0f},gbps={nbytes/q_us/1e3:.2f}")
+        print(f"dequantize_{b}_256x1024,{dq_us:.0f},"
+              f"gbps={nbytes/dq_us/1e3:.2f}")
+        out[b] = {"quantize_us": q_us, "dequantize_us": dq_us}
+
+    # decode variants head-to-head on the xla backend (LUT vs bit math)
+    codes = ops.f2p_quantize(x, fmt, backend="xla").codes
+    lut_us, _ = timeit(lambda: K.dequantize_lut(codes, fmt),
+                       warmup=warmup, reps=reps)
+    bit_us, _ = timeit(lambda: K.dequantize_tile_math(codes, fmt),
+                       warmup=warmup, reps=reps)
+    print(f"decode_lut_8b,{lut_us:.0f},vs_bit_math={bit_us/lut_us:.2f}x")
+    out["decode_lut_us"] = lut_us
+    out["decode_bit_math_us"] = bit_us
+    return out
 
 
-def bench_compression(quick=False):
+def bench_compression(quick=False, **_):
     """Gradient-compression quality: relative error + wire-byte savings."""
     import jax.numpy as jnp
 
@@ -88,14 +167,14 @@ def bench_compression(quick=False):
     rng = np.random.default_rng(0)
     g = rng.normal(0, 1e-3, size=(1024, 512)).astype(np.float32)
     ccfg = CompressionConfig()
-    q = np.asarray(_roundtrip(jnp.asarray(g), ccfg.fmt, ccfg.block))
+    q = np.asarray(_sync(_roundtrip(jnp.asarray(g), ccfg.fmt, ccfg.block)))
     rel = np.abs(q - g).mean() / np.abs(g).mean()
     wire = 1 + 4 / ccfg.block  # bytes/elem vs 4 f32
     print(f"grad_compress_rel_err,{rel*1e4:.1f},bytes_per_elem={wire:.2f}_vs_4")
     return {"rel_err": float(rel), "bytes_per_elem": wire}
 
 
-def bench_kv_quality(quick=False):
+def bench_kv_quality(quick=False, **_):
     """F2P8 KV cache: decode logits drift on the smoke llama config."""
     import jax
     import jax.numpy as jnp
@@ -120,23 +199,74 @@ def bench_kv_quality(quick=False):
     return {"drift": float(drift), "top1_match": float(match)}
 
 
+BENCHES = {
+    "table5": bench_table5,
+    "table6": bench_table6,
+    "fig1": bench_fig1,
+    "host_encode": bench_host_encode,
+    "kernels": bench_kernels,
+    "compression": bench_compression,
+    "kv_quality": bench_kv_quality,
+}
+
+
+def _append_trajectory(results: dict, args) -> None:
+    """Append this run's kernel/table timings to BENCH_kernels.json so later
+    perf PRs have an apples-to-apples baseline."""
+    entry = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": bool(args.quick),
+        "warmup": args.warmup,
+        "reps": args.reps,
+        "host_encode": results.get("host_encode"),
+        "kernels": results.get("kernels"),
+        "table5_us": (results.get("table5") or {}).get("us"),
+        "table6_us": {k: v["us"] for k, v in
+                      (results.get("table6") or {}).items()},
+    }
+    traj = {"schema": 1, "entries": []}
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):  # tolerate hand-edited/merged junk
+                traj = loaded
+        except (json.JSONDecodeError, OSError):
+            pass
+    traj.setdefault("entries", []).append(entry)
+    with open(TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    print(f"# trajectory entry appended -> {TRAJECTORY}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI-friendly)")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="warmup calls before timing (compile + cache)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per measurement")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
     args = ap.parse_args()
-    os.makedirs("benchmarks/out", exist_ok=True)
+
+    names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    unknown = set(names) - set(BENCHES)
+    if unknown:
+        ap.error(f"unknown benches: {sorted(unknown)}")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
     print("name,us_per_call,derived")
-    results = {
-        "table5": bench_table5(args.quick),
-        "table6": bench_table6(args.quick),
-        "fig1": bench_fig1(),
-        "kernels": bench_kernels(args.quick),
-        "compression": bench_compression(args.quick),
-        "kv_quality": bench_kv_quality(args.quick),
-    }
-    with open("benchmarks/out/results.json", "w") as f:
+    results = {}
+    for name in names:
+        results[name] = BENCHES[name](args.quick, warmup=args.warmup,
+                                      reps=args.reps)
+    with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
-    print("# full tables -> benchmarks/out/results.json")
+    print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
+    if {"host_encode", "kernels"} & set(names):
+        _append_trajectory(results, args)
 
 
 if __name__ == "__main__":

@@ -45,6 +45,22 @@ import numpy as np
 
 __all__ = ["Flavor", "F2PFormat"]
 
+# Block size for the closed-form encode/round sweeps: big enough to amortize
+# per-op dispatch, small enough that ~8 f64 intermediates stay in L2.
+_BLOCK = 1 << 15
+
+
+def _blockwise(fn, x, out_dtype):
+    """Apply vectorized ``fn`` over cache-resident blocks, preserving shape."""
+    x = np.asarray(x, dtype=np.float64)
+    if x.size <= _BLOCK:
+        return fn(x)
+    flat = x.ravel()
+    out = np.empty(flat.size, dtype=out_dtype)
+    for i in range(0, flat.size, _BLOCK):
+        out[i:i + _BLOCK] = fn(flat[i:i + _BLOCK])
+    return out.reshape(x.shape)
+
 
 class Flavor(enum.Enum):
     SR = "sr"  # small reals
@@ -129,9 +145,15 @@ class F2PFormat:
 
     # ---- field helpers ----------------------------------------------------
     def e_bits_of_v(self, v):
-        """Exponent-field size for exponent value v: smallest E with v <= 2^(E+1)-2."""
+        """Exponent-field size for exponent value v: smallest E with v <= 2^(E+1)-2.
+
+        Exact integer thresholds (esize grows by one at v = 2^j - 1), no libm —
+        the same formulation the TPU kernel uses (kernels/f2p_quant.py)."""
         v = np.asarray(v, dtype=np.int64)
-        return np.where(v > 0, np.int64(np.floor(np.log2(np.maximum(v, 1) + 1))), 0)
+        es = np.zeros_like(v)
+        for j in range(1, 1 << self.h_bits):
+            es += v >= ((1 << j) - 1)
+        return es
 
     def m_bits_of_e(self, e_bits):
         return self.payload_bits - self.h_bits - np.asarray(e_bits, dtype=np.int64)
@@ -205,12 +227,28 @@ class F2PFormat:
         return np.concatenate([neg, pos])
 
     @property
+    def v_sub(self) -> int:
+        """The (single) subnormal exponent bucket."""
+        return 0 if self.flavor.exponent_sign > 0 else self.vmax - 1
+
+    @property
+    def v_top(self) -> int:
+        """The bucket holding the largest magnitudes."""
+        return self.vmax - 1 if self.flavor.exponent_sign > 0 else 0
+
+    @property
     def max_value(self) -> float:
-        return float(self.payload_grid[-1])
+        # closed form (no grid): top bucket is always normal (v_top != v_sub
+        # since vmax >= 3), so max = 2^e * (2 - 2^-mbits).
+        v = self.v_top
+        e = self.flavor.exponent_sign * v + self.bias
+        mbits = self.payload_bits - self.h_bits - int(self.e_bits_of_v(v))
+        return float(np.ldexp((1 << (mbits + 1)) - 1, e - mbits))
 
     @property
     def min_value(self) -> float:
-        return -self.max_value if self.signed else float(self.payload_grid[0])
+        # zero is always representable (subnormal bucket, m = 0)
+        return -self.max_value if self.signed else 0.0
 
     @property
     def min_positive(self) -> float:
@@ -222,7 +260,102 @@ class F2PFormat:
         """Magnitudes -> payload codes of the nearest representable value.
 
         Round-to-nearest; ties go to the LARGER magnitude. Values outside the
-        range clamp to the extreme codes."""
+        range clamp to the extreme codes (negatives clamp to the zero code).
+
+        Closed form — O(vmax) memory (<= 255 per-bucket constants), not
+        O(2^payload_bits), mirroring the TPU kernel's branch-free arithmetic
+        (kernels/f2p_quant.py) in float64: frexp exponent bucket -> per-bucket
+        gathers -> half-up mantissa round (exact: all intermediates span < 53
+        significand bits) -> code assembly. The old grid + searchsorted path
+        survives as the test oracle ``encode_payload_nearest_grid``.
+
+        Computed in cache-resident blocks: the ~12 vectorized passes are
+        memory-bound, so keeping intermediates in L2 is ~2x over one sweep
+        of the full array."""
+        return _blockwise(self._encode_payload_block, x, self.code_dtype)
+
+    def _encode_payload_block(self, x: np.ndarray) -> np.ndarray:
+        t = self._bucket_tables
+        mag, v = self._bucket_of(x)
+        # u = mag * 2^shift - lead * 2^mbits: exact — the scaling is a power
+        # of two and the subtraction is Sterbenz-safe. Half-up rounding must
+        # go through the fractional part: u - floor(u) is exact in IEEE,
+        # whereas u + 0.5 can round up for u just below a tie (u = 0.5 - ulp).
+        u = np.ldexp(mag, t["shift"][v]) - t["base"][v]
+        mf = np.floor(u)
+        m = (mf + (u - mf >= 0.5)).astype(np.int64)
+        m = np.maximum(m, 0)
+        # mantissa overflow moves one bucket toward larger magnitude (V+sgn,
+        # precomputed as code_ovf; the top bucket clamps to its max code)
+        payload = np.where(m >= t["mmax"][v], t["code_ovf"][v],
+                           t["code_base"][v] + m)
+        return payload.astype(self.code_dtype)
+
+    @functools.cached_property
+    def _bucket_tables(self) -> dict:
+        """Per-exponent-bucket constants (length-vmax arrays) driving the
+        closed-form encode/round: scale shift, leading-bit offset, assembled
+        code bases, and the mantissa-overflow target code."""
+        nu, h, sgn = self.payload_bits, self.h_bits, self.flavor.exponent_sign
+        one = np.int64(1)
+        v = np.arange(self.vmax, dtype=np.int64)
+        es = self.e_bits_of_v(v)
+        mbits = nu - h - es
+        is_sub = v == self.v_sub
+        e_val = sgn * v
+        exp_lo = np.where(is_sub, e_val + self.bias + 1, e_val + self.bias)
+        lead = np.where(is_sub, 0, 1)
+        code_base = (es << (nu - h)) | ((v - ((one << es) - 1)) << mbits)
+        # overflow lands at m=0 of the next-larger-magnitude bucket; the top
+        # bucket clamps to its own max code instead
+        vn = np.clip(v + sgn, 0, self.vmax - 1)
+        esn = self.e_bits_of_v(vn)
+        code_ovf = (esn << (nu - h)) | ((vn - ((one << esn) - 1))
+                                        << (nu - h - esn))
+        code_ovf = np.where(v == self.v_top,
+                            code_base + ((one << mbits) - 1), code_ovf)
+        return {
+            "shift": (mbits - exp_lo).astype(np.int64),
+            "base": np.ldexp(lead.astype(np.float64), mbits),
+            "mmax": one << mbits,
+            "code_base": code_base,
+            "code_ovf": code_ovf,
+        }
+
+    def _bucket_of(self, x):
+        """(clamped magnitudes, exponent-bucket index V) — the shared head of
+        the closed-form encode and round paths."""
+        sgn, vmax, bias = self.flavor.exponent_sign, self.vmax, self.bias
+        mag = np.clip(np.asarray(x, dtype=np.float64), 0.0, self.max_value)
+        # NaN passes through clip and would hit an undefined float->int cast;
+        # the grid oracle's searchsorted treats NaN as +inf -> clamp to max
+        mag = np.where(np.isnan(mag), self.max_value, mag)
+        # exact floor(log2 mag) via frexp: mag = f * 2^e, f in [0.5, 1)
+        _, e = np.frexp(mag)
+        v = np.clip(sgn * (e.astype(np.int64) - 1 - bias), 0, vmax - 1)
+        # frexp(0) reports e=0, which would land zero in an arbitrary bucket
+        return mag, np.where(mag == 0.0, np.int64(self.v_sub), v)
+
+    def quantize_payload(self, x: np.ndarray) -> np.ndarray:
+        """Magnitudes -> nearest representable magnitudes, fused closed form
+        (no code assembly / decode round-trip): the rounded value is
+        reconstructed directly as (lead*2^mbits + m) * 2^-shift. A mantissa
+        that rounds up to 2^mbits needs no bucket hop — the reconstruction is
+        exactly the next bucket's smallest value."""
+        return _blockwise(self._round_payload_block, x, np.float64)
+
+    def _round_payload_block(self, x: np.ndarray) -> np.ndarray:
+        t = self._bucket_tables
+        mag, v = self._bucket_of(x)
+        base, shift = t["base"][v], t["shift"][v]
+        u = np.ldexp(mag, shift) - base
+        mf = np.floor(u)
+        m = np.maximum(mf + (u - mf >= 0.5), 0.0)
+        return np.ldexp(m + base, -shift)
+
+    def encode_payload_nearest_grid(self, x: np.ndarray) -> np.ndarray:
+        """Grid-materializing oracle for ``encode_payload_nearest`` (tests
+        only): O(2^payload_bits) memory, bit-identical semantics."""
         g = self.payload_grid
         x = np.asarray(x, dtype=np.float64)
         mid = (g[:-1] + g[1:]) / 2.0
@@ -239,6 +372,22 @@ class F2PFormat:
         full = (sign.astype(np.int64) << self.payload_bits) | mag_codes
         return full.astype(self.code_dtype)
 
+    def encode_nearest_grid(self, x: np.ndarray) -> np.ndarray:
+        """Grid-oracle twin of ``encode_nearest`` (tests only)."""
+        x = np.asarray(x, dtype=np.float64)
+        if not self.signed:
+            return self.encode_payload_nearest_grid(np.maximum(x, 0.0))
+        sign = (x < 0) | ((x == 0) & np.signbit(x))
+        mag_codes = self.encode_payload_nearest_grid(np.abs(x)).astype(np.int64)
+        full = (sign.astype(np.int64) << self.payload_bits) | mag_codes
+        return full.astype(self.code_dtype)
+
     def quantize_value(self, x: np.ndarray) -> np.ndarray:
-        """Round values to the nearest representable value (round-trip)."""
-        return self.decode(self.encode_nearest(x))
+        """Round values to the nearest representable value. Fused closed form
+        — equivalent to decode(encode_nearest(x)) but with no code assembly
+        (the minmax/table6 hot path)."""
+        x = np.asarray(x, dtype=np.float64)
+        if not self.signed:
+            return self.quantize_payload(np.maximum(x, 0.0))
+        mag = self.quantize_payload(np.abs(x))
+        return np.where(x < 0, -mag, mag)

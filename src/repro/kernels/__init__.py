@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Backend selection for every kernel entry point lives in
+# repro.kernels.dispatch (see DESIGN.md §3.4) — importing submodules
+# registers their implementations with the registry.

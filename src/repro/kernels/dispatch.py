@@ -1,0 +1,125 @@
+"""Backend dispatch registry for the F2P kernel ops (DESIGN.md §3.4).
+
+One explicit, trace-safe selection point for every kernel entry in the repo,
+replacing the former scattered ``interpret=not _on_tpu()`` defaults in
+``f2p_quant.py`` / ``f2p_matmul.py`` and the tracer-probe hack
+(``isinstance(jnp.zeros(()), Tracer)``) in ``ops.py``.
+
+Backends:
+
+  ``pallas``            compiled Pallas kernels — the TPU hot path
+  ``pallas_interpret``  Pallas in interpreter mode — kernel debugging / CI
+                        parity runs on CPU; slow, never a default inside jit
+  ``xla``               the same tile math as plain jnp under jit — fuses into
+                        surrounding HLO; the host/CPU default, and the only
+                        sane choice inside an outer trace
+
+Resolution order when no backend is requested:
+
+  1. ``F2P_BACKEND`` env var (explicit operator override, e.g. CI matrices)
+  2. inside a jit trace -> ``xla`` — an inner ``pallas_call`` defeats XLA
+     fusion, and interpret-mode pallas inside a traced region is pathological
+     (``jax.core.trace_state_clean()`` makes this decision trace-safe: no
+     tracer is materialized to probe)
+  3. TPU available -> ``pallas``
+  4. otherwise -> ``xla``
+
+Ops register per-backend implementations with :func:`register`; callers go
+through :func:`lookup`, which resolves the backend *and* validates that the
+op actually has an implementation for it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+
+__all__ = ["PALLAS", "PALLAS_INTERPRET", "XLA", "BACKENDS", "register",
+           "implementations", "resolve_backend", "pallas_variant", "lookup"]
+
+PALLAS = "pallas"
+PALLAS_INTERPRET = "pallas_interpret"
+XLA = "xla"
+BACKENDS = (PALLAS, PALLAS_INTERPRET, XLA)
+
+# accepted spellings -> canonical name
+_ALIASES = {
+    "pallas-interpret": PALLAS_INTERPRET,
+    "interpret": PALLAS_INTERPRET,
+    "jit": XLA,
+    "tile_math": XLA,
+}
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of ``op``."""
+    backend = _canonical(backend)
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+def implementations(op: str) -> dict[str, Callable]:
+    """Registered backend -> implementation map for ``op`` (a copy)."""
+    return dict(_REGISTRY.get(op, {}))
+
+
+def _canonical(backend: str) -> str:
+    b = _ALIASES.get(backend, backend)
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS} (or aliases {tuple(_ALIASES)})")
+    return b
+
+
+def pallas_variant() -> str:
+    """Which Pallas flavor this process can actually run: compiled on TPU,
+    interpreter everywhere else."""
+    return PALLAS if jax.default_backend() == "tpu" else PALLAS_INTERPRET
+
+
+def _tracing() -> bool:
+    """True when called under an active jax trace. Prefers the trace-safe
+    ``jax.core.trace_state_clean`` (nothing is traced to find out); newer jax
+    releases that drop it fall back to a one-off tracer probe."""
+    tsc = getattr(jax.core, "trace_state_clean", None)
+    if tsc is not None:
+        return not tsc()
+    import jax.numpy as jnp
+
+    tracer_cls = getattr(jax.core, "Tracer", ())
+    return isinstance(jnp.zeros(()), tracer_cls)
+
+
+def resolve_backend(backend: str | None = None, *, op: str | None = None) -> str:
+    """Resolve a backend name. ``None`` applies the policy in the module doc;
+    with ``op`` given, also require that the op implements the result."""
+    if backend is None:
+        backend = os.environ.get("F2P_BACKEND") or None
+    if backend is None:
+        if _tracing():
+            backend = XLA
+        elif jax.default_backend() == "tpu":
+            backend = PALLAS
+        else:
+            backend = XLA
+    backend = _canonical(backend)
+    if op is not None:
+        impls = _REGISTRY.get(op, {})
+        if backend not in impls:
+            raise ValueError(
+                f"op {op!r} has no {backend!r} implementation "
+                f"(available: {sorted(impls) or 'none'})")
+    return backend
+
+
+def lookup(op: str, backend: str | None = None) -> tuple[str, Callable]:
+    """(resolved backend name, implementation) for ``op``."""
+    b = resolve_backend(backend, op=op)
+    return b, _REGISTRY[op][b]

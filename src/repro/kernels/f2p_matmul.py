@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels import dispatch
 from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
 
 WEIGHT_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
@@ -66,10 +67,21 @@ def _kernel(fmt, block, nk, x_ref, c_ref, s_ref, o_ref):
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
 def f2p_dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,
-                       block: int = 128, interpret: bool = True):
-    """y = x @ dequant(codes, scales); x [M,K], codes [K,N] uint8."""
+                       block: int = 128, interpret: bool | None = None):
+    """y = x @ dequant(codes, scales); x [M,K], codes [K,N] uint8.
+
+    ``interpret=None`` resolves via the dispatch registry: compiled on TPU,
+    interpreter elsewhere."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _dequant_matmul_jit(x, codes, scales, fmt=fmt, block=block,
+                               interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def _dequant_matmul_jit(x, codes, scales, *, fmt: F2PFormat,
+                        block: int, interpret: bool):
     M, K = x.shape
     K2, N = codes.shape
     assert K == K2 and K % K_T == 0 and K_T % block == 0
@@ -88,3 +100,31 @@ def f2p_dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
     )(x, codes, scales)
+
+
+# ---------------------------------------------------------------------------
+# Registry wiring: serve paths pick the backend through one dispatch point
+# ---------------------------------------------------------------------------
+@dispatch.register("dequant_matmul", dispatch.PALLAS)
+def _matmul_pallas(x, codes, scales, *, fmt=WEIGHT_FMT, block=128):
+    return f2p_dequant_matmul(x, codes, scales, fmt=fmt, block=block,
+                              interpret=False)
+
+
+@dispatch.register("dequant_matmul", dispatch.PALLAS_INTERPRET)
+def _matmul_pallas_interp(x, codes, scales, *, fmt=WEIGHT_FMT, block=128):
+    return f2p_dequant_matmul(x, codes, scales, fmt=fmt, block=block,
+                              interpret=True)
+
+
+@dispatch.register("dequant_matmul", dispatch.XLA)
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def _matmul_xla(x, codes, scales, *, fmt=WEIGHT_FMT, block=128):
+    return ref_dequant_matmul(x, codes, scales, fmt, block)
+
+
+def dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,
+                   block: int = 128, backend: str | None = None):
+    """Backend-dispatched y = x @ dequant(codes, scales)."""
+    _, fn = dispatch.lookup("dequant_matmul", backend)
+    return fn(x, codes, scales, fmt=fmt, block=block)

@@ -26,12 +26,15 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.f2p import F2PFormat
+from repro.kernels import dispatch
 
-__all__ = ["quantize_tile_math", "dequantize_tile_math",
-           "f2p_quantize_pallas", "f2p_dequantize_pallas"]
+__all__ = ["quantize_tile_math", "dequantize_tile_math", "dequantize_lut",
+           "f2p_quantize_pallas", "f2p_dequantize_pallas",
+           "f2p_quantize_xla", "f2p_dequantize_xla"]
 
 # Default tile: 8 sublanes x 512 lanes of f32 = 16 KiB in, 4 KiB codes out.
 TILE_R = 8
@@ -49,10 +52,7 @@ def _fmt_consts(fmt: F2PFormat):
         raise ValueError("kernel supports h_bits in {1,2}")
     nu, h = fmt.payload_bits, fmt.h_bits
     sgn = fmt.flavor.exponent_sign
-    vmax = fmt.vmax
-    v_sub = 0 if sgn > 0 else vmax - 1   # the subnormal bucket
-    v_top = vmax - 1 if sgn > 0 else 0   # bucket holding the largest values
-    return nu, h, sgn, vmax, v_sub, v_top, fmt.bias
+    return nu, h, sgn, fmt.vmax, fmt.v_sub, fmt.v_top, fmt.bias
 
 
 def quantize_tile_math(x: jnp.ndarray, fmt: F2PFormat) -> jnp.ndarray:
@@ -95,7 +95,10 @@ def quantize_tile_math(x: jnp.ndarray, fmt: F2PFormat) -> jnp.ndarray:
         u = u - (lead << mbits).astype(jnp.float32)
         # far-out-of-range x would overflow the int cast; clamp to "overflow"
         u = jnp.minimum(u, 2.0 * (1 << mbits).astype(jnp.float32))
-        m = jnp.floor(u + 0.5).astype(jnp.int32)
+        # half-up via the (exact) fractional part: u + 0.5 is inexact for u
+        # just below a tie (0.5 - ulp) and would spuriously round up
+        mf = jnp.floor(u)
+        m = (mf + (u - mf >= 0.5)).astype(jnp.int32)
         m = jnp.maximum(m, 0)
         ovf = m >= (1 << mbits)
         return m, mbits, ovf
@@ -140,6 +143,43 @@ def dequantize_tile_math(codes: jnp.ndarray, fmt: F2PFormat,
 
 
 # ---------------------------------------------------------------------------
+# LUT decode (host/XLA backend, 8-bit formats)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=128)
+def _decode_table(fmt: F2PFormat) -> np.ndarray:
+    """All 2^n_bits decoded values (sign included), f32-exact for n<=16."""
+    codes = np.arange(1 << fmt.n_bits, dtype=np.int64)
+    return fmt.decode(codes).astype(np.float32)
+
+
+def dequantize_lut(codes: jnp.ndarray, fmt: F2PFormat,
+                   out_dtype=jnp.float32) -> jnp.ndarray:
+    """Table-gather F2P decode: codes -> f32 values (unscaled).
+
+    Bit-identical to ``dequantize_tile_math`` (every decoded value is exactly
+    f32-representable for n_bits <= 16). On CPU/XLA a 256-entry gather beats
+    the branch-free bit arithmetic; the dispatch registry selects it for
+    8-bit formats on the ``xla`` backend. Never used inside Pallas kernels —
+    on TPU the VPU lane arithmetic wins (no gather unit; DESIGN.md §3.3)."""
+    table = jnp.asarray(_decode_table(fmt))
+    return jnp.take(table, codes.astype(jnp.int32), axis=0).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shared block-scale math (kernel body == XLA backend, bitwise)
+# ---------------------------------------------------------------------------
+def _block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str):
+    """Per-block scales from [..., nblocks, block] f32 data."""
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # multiply by reciprocal constant: XLA const-folds `x / const` into this
+    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
+    scale = absmax * jnp.float32(1.0 / fmt.max_value)
+    if scale_mode == "pow2":
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+    return jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels
 # ---------------------------------------------------------------------------
 def _quant_kernel(fmt: F2PFormat, block: int, scale_mode: str,
@@ -147,13 +187,7 @@ def _quant_kernel(fmt: F2PFormat, block: int, scale_mode: str,
     x = x_ref[...].astype(jnp.float32)
     r, ccols = x.shape
     xb = x.reshape(r, ccols // block, block)
-    absmax = jnp.max(jnp.abs(xb), axis=-1)
-    # multiply by reciprocal constant: XLA const-folds `x / const` into this
-    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
-    scale = absmax * jnp.float32(1.0 / fmt.max_value)
-    if scale_mode == "pow2":
-        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
-    scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+    scale = _block_scales(xb, fmt, scale_mode)
     y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, ccols)
     codes_ref[...] = quantize_tile_math(y, fmt)
     scales_ref[...] = scale
@@ -174,12 +208,25 @@ def _grid2d(shape, tr, tc):
     return (r // tr, c // tc)
 
 
+def f2p_quantize_pallas(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
+                        scale_mode: str = "f32", interpret: bool | None = None,
+                        tile_r: int = TILE_R, tile_c: int = TILE_C):
+    """Blocked F2P quantization of a 2D array. Returns (codes, scales).
+
+    ``interpret=None`` resolves via the dispatch registry: compiled on TPU,
+    interpreter elsewhere."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _quantize_pallas_jit(x, fmt, block=block, scale_mode=scale_mode,
+                                interpret=bool(interpret), tile_r=tile_r,
+                                tile_c=tile_c)
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode",
                                              "interpret", "tile_r", "tile_c"))
-def f2p_quantize_pallas(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
-                        scale_mode: str = "f32", interpret: bool = True,
-                        tile_r: int = TILE_R, tile_c: int = TILE_C):
-    """Blocked F2P quantization of a 2D array. Returns (codes, scales)."""
+def _quantize_pallas_jit(x: jnp.ndarray, fmt: F2PFormat, *, block: int,
+                         scale_mode: str, interpret: bool,
+                         tile_r: int, tile_c: int):
     r, c = x.shape
     tile_c = min(tile_c, c)
     tile_r = min(tile_r, r)
@@ -203,12 +250,25 @@ def f2p_quantize_pallas(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
     return codes, scales
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype",
-                                             "interpret", "tile_r", "tile_c"))
 def f2p_dequantize_pallas(codes: jnp.ndarray, scales: jnp.ndarray,
                           fmt: F2PFormat, *, block: int = 128,
-                          out_dtype=jnp.float32, interpret: bool = True,
+                          out_dtype=jnp.float32, interpret: bool | None = None,
                           tile_r: int = TILE_R, tile_c: int = TILE_C):
+    """Blocked F2P dequantization. ``interpret=None`` resolves via dispatch."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _dequantize_pallas_jit(codes, scales, fmt, block=block,
+                                  out_dtype=out_dtype,
+                                  interpret=bool(interpret),
+                                  tile_r=tile_r, tile_c=tile_c)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype",
+                                             "interpret", "tile_r", "tile_c"))
+def _dequantize_pallas_jit(codes: jnp.ndarray, scales: jnp.ndarray,
+                           fmt: F2PFormat, *, block: int,
+                           out_dtype, interpret: bool,
+                           tile_r: int, tile_c: int):
     r, c = codes.shape
     tile_c = min(tile_c, c)
     tile_r = min(tile_r, r)
@@ -225,3 +285,65 @@ def f2p_dequantize_pallas(codes: jnp.ndarray, scales: jnp.ndarray,
         interpret=interpret,
     )(codes, scales)
     return out
+
+
+# ---------------------------------------------------------------------------
+# XLA backend (plain jnp under jit — fuses into surrounding HLO) + registry
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def f2p_quantize_xla(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
+                     scale_mode: str = "f32"):
+    """Blocked quantize as fused tile math; bitwise-identical to Pallas."""
+    x32 = x.astype(jnp.float32)
+    r, c = x32.shape
+    xb = x32.reshape(r, c // block, block)
+    scale = _block_scales(xb, fmt, scale_mode)
+    y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, c)
+    return quantize_tile_math(y, fmt), scale
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype"))
+def f2p_dequantize_xla(codes: jnp.ndarray, scales: jnp.ndarray,
+                       fmt: F2PFormat, *, block: int = 128,
+                       out_dtype=jnp.float32):
+    """Blocked dequantize as fused tile math; 8-bit formats go through the
+    256-entry LUT gather (beats bit arithmetic on CPU — DESIGN.md §3.3)."""
+    if fmt.n_bits <= 8:
+        vals = dequantize_lut(codes, fmt, jnp.float32)
+    else:
+        vals = dequantize_tile_math(codes, fmt, jnp.float32)
+    r, c = codes.shape
+    vals = vals.reshape(r, c // block, block) * scales[..., None]
+    return vals.reshape(r, c).astype(out_dtype)
+
+
+@dispatch.register("quantize", dispatch.PALLAS)
+def _quantize_pallas_compiled(x, fmt, *, block=128, scale_mode="f32"):
+    return f2p_quantize_pallas(x, fmt, block=block, scale_mode=scale_mode,
+                               interpret=False)
+
+
+@dispatch.register("quantize", dispatch.PALLAS_INTERPRET)
+def _quantize_pallas_interp(x, fmt, *, block=128, scale_mode="f32"):
+    return f2p_quantize_pallas(x, fmt, block=block, scale_mode=scale_mode,
+                               interpret=True)
+
+
+dispatch.register("quantize", dispatch.XLA)(f2p_quantize_xla)
+
+
+@dispatch.register("dequantize", dispatch.PALLAS)
+def _dequantize_pallas_compiled(codes, scales, fmt, *, block=128,
+                                out_dtype=jnp.float32):
+    return f2p_dequantize_pallas(codes, scales, fmt, block=block,
+                                 out_dtype=out_dtype, interpret=False)
+
+
+@dispatch.register("dequantize", dispatch.PALLAS_INTERPRET)
+def _dequantize_pallas_interp(codes, scales, fmt, *, block=128,
+                              out_dtype=jnp.float32):
+    return f2p_dequantize_pallas(codes, scales, fmt, block=block,
+                                 out_dtype=out_dtype, interpret=True)
+
+
+dispatch.register("dequantize", dispatch.XLA)(f2p_dequantize_xla)

@@ -1,27 +1,23 @@
 """Public jit'd F2P tensor ops used across the framework.
 
 `f2p_quantize` / `f2p_dequantize` accept arbitrary-rank arrays (the last axis
-is the blocked one), pad to tile boundaries, and dispatch to the Pallas
-kernels (interpret=True on CPU, compiled on TPU) or to the same tile math
-under plain jit (`use_pallas=False` — the path the big jitted train/serve
-steps embed, since XLA fuses it into surrounding HLO).
+is the blocked one), pad to tile boundaries, and route through the backend
+dispatch registry (`repro.kernels.dispatch`): compiled Pallas on TPU,
+fused-XLA tile math on CPU and inside jit traces (where XLA fuses it into the
+surrounding HLO), interpret-mode Pallas on request. Selection is one explicit,
+trace-safe point — no tracer probing, no per-call-site `interpret=` defaults.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.f2p import F2PFormat
-from repro.kernels import f2p_quant as K
+from repro.kernels import dispatch
+from repro.kernels import f2p_quant as K  # noqa: F401  (registers backends)
 
 __all__ = ["f2p_quantize", "f2p_dequantize", "QTensor", "quantize_tree",
            "dequantize_tree"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @jax.tree_util.register_pytree_node_class
@@ -32,10 +28,10 @@ class QTensor:
         self.codes, self.scales = codes, scales
         self.fmt, self.block, self.shape = fmt, block, tuple(shape)
 
-    def dequantize(self, dtype=jnp.float32):
+    def dequantize(self, dtype=jnp.float32, backend: str | None = None):
         return f2p_dequantize(self.codes, self.scales, self.fmt,
                               block=self.block, out_dtype=dtype,
-                              out_shape=self.shape)
+                              out_shape=self.shape, backend=backend)
 
     @property
     def nbytes(self):
@@ -65,65 +61,38 @@ def _to_2d(x, block):
     return x2, lead, n
 
 
+def _pick_backend(backend: str | None, use_pallas: bool | None) -> str | None:
+    """Fold the legacy ``use_pallas`` switch into a backend name."""
+    if use_pallas is None:
+        return backend
+    if backend is not None:
+        raise ValueError("pass either backend= or use_pallas=, not both")
+    return dispatch.pallas_variant() if use_pallas else dispatch.XLA
+
+
 def f2p_quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
-                 scale_mode: str = "f32", use_pallas: bool | None = None
-                 ) -> QTensor:
+                 scale_mode: str = "f32", backend: str | None = None,
+                 use_pallas: bool | None = None) -> QTensor:
     """Block-quantize any-rank array along its last axis into a QTensor."""
     orig_shape = x.shape
-    x2, lead, n = _to_2d(x, block)
-    if use_pallas is None:
-        use_pallas = not _in_trace()
-    if use_pallas:
-        codes, scales = K.f2p_quantize_pallas(
-            x2, fmt, block=block, scale_mode=scale_mode,
-            interpret=not _on_tpu())
-    else:
-        codes, scales = _quantize_jit_math(x2, fmt, block, scale_mode)
+    x2, _, _ = _to_2d(x, block)
+    _, fn = dispatch.lookup("quantize", _pick_backend(backend, use_pallas))
+    codes, scales = fn(x2, fmt, block=block, scale_mode=scale_mode)
     return QTensor(codes, scales, fmt, block, orig_shape)
 
 
 def f2p_dequantize(codes, scales, fmt: F2PFormat, *, block: int = 128,
                    out_dtype=jnp.float32, out_shape=None,
+                   backend: str | None = None,
                    use_pallas: bool | None = None):
-    if use_pallas is None:
-        use_pallas = not _in_trace()
-    if use_pallas:
-        out = K.f2p_dequantize_pallas(codes, scales, fmt, block=block,
-                                      out_dtype=out_dtype,
-                                      interpret=not _on_tpu())
-    else:
-        vals = K.dequantize_tile_math(codes, fmt, jnp.float32)
-        r, c = codes.shape
-        vals = vals.reshape(r, c // block, block) * scales[..., None]
-        out = vals.reshape(r, c).astype(out_dtype)
+    _, fn = dispatch.lookup("dequantize", _pick_backend(backend, use_pallas))
+    out = fn(codes, scales, fmt, block=block, out_dtype=out_dtype)
     if out_shape is not None:
         lead = 1
         for d in out_shape[:-1]:
             lead *= d
         out = out[:lead, :out_shape[-1]].reshape(out_shape)
     return out
-
-
-def _in_trace() -> bool:
-    """True when called inside a jit trace — embed tile math instead of an
-    inner pallas_call (XLA fuses it; also interpret-mode pallas inside jit on
-    CPU is unnecessarily slow)."""
-    return isinstance(jnp.zeros(()), jax.core.Tracer)
-
-
-def _quantize_jit_math(x2, fmt, block, scale_mode):
-    x32 = x2.astype(jnp.float32)
-    r, c = x32.shape
-    xb = x32.reshape(r, c // block, block)
-    absmax = jnp.max(jnp.abs(xb), axis=-1)
-    # multiply by reciprocal constant: XLA const-folds `x / const` into this
-    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
-    scale = absmax * jnp.float32(1.0 / fmt.max_value)
-    if scale_mode == "pow2":
-        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
-    scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
-    y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, c)
-    return K.quantize_tile_math(y, fmt), scale
 
 
 # ---- pytree helpers (gradient compression / checkpoint paths) -------------

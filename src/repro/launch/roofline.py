@@ -198,6 +198,8 @@ def analyze(compiled, *, arch, shape, mesh_name, n_devices, cfg, seq, gbatch,
                   "generated_code_size_in_bytes"):
             memd[k] = getattr(mem, k, 0)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     memd["xla_flops_body_once"] = float(ca.get("flops", 0.0))
     a = analyze_hlo(compiled.as_text(), n_devices)
     return Roofline(

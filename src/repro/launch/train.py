@@ -55,8 +55,9 @@ def main():
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.global_batch)
 
-    mesh = jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh(shape, ("data", "model"))
     rules = rules_for(cfg, mesh, "train_4k")
     print(f"mesh {dict(mesh.shape)}  arch {cfg.name} "
           f"({cfg.param_count()/1e6:.1f}M params)")

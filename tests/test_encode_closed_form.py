@@ -1,0 +1,92 @@
+"""Bit-exact equivalence of the closed-form host encode vs the grid oracle.
+
+The closed-form `encode_payload_nearest` (DESIGN.md §2) must agree
+code-for-code with the demoted grid+searchsorted path on every format the
+reference supports: all four flavors x h_bits in {1,2,3} x signed/unsigned
+x n_bits in 6..16 plus 19 (the table6/TF32-width sweep) — including exact
+midpoint ties, one-ulp-off-tie values, subnormals, zero, negative-zero, NaN,
+inf, and out-of-range clamping.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.f2p import F2PFormat, Flavor
+
+ALL_FMTS = []
+for _fl, _h, _n, _s in itertools.product(Flavor, (1, 2, 3),
+                                         (*range(6, 17), 19),
+                                         (False, True)):
+    try:
+        ALL_FMTS.append(F2PFormat(_n, _h, _fl, _s))
+    except ValueError:  # payload too small for this H
+        pass
+
+
+def _probe_values(fmt: F2PFormat) -> np.ndarray:
+    """Every grid point, every midpoint tie, values one ulp either side of
+    each tie, plus random in/out-of-range and the special cases."""
+    g = fmt.payload_grid
+    mid = (g[:-1] + g[1:]) / 2.0
+    rng = np.random.default_rng(fmt.n_bits * 100 + fmt.h_bits)
+    return np.concatenate([
+        g, mid,
+        np.nextafter(mid, -np.inf), np.nextafter(mid, np.inf),
+        rng.uniform(0.0, fmt.max_value * 1.1, 2048),
+        rng.normal(0.0, fmt.max_value / 100, 512),   # subnormal-heavy
+        [0.0, fmt.min_positive, fmt.min_positive / 2, fmt.min_positive / 4,
+         fmt.max_value, fmt.max_value * 8, np.nextafter(fmt.max_value, np.inf),
+         1e300, 5e-324, -3.0, -1e300, np.inf, np.nan],
+    ])
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_payload_encode_matches_grid_oracle(fmt):
+    x = _probe_values(fmt)
+    np.testing.assert_array_equal(
+        fmt.encode_payload_nearest(x), fmt.encode_payload_nearest_grid(x),
+        err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", [f for f in ALL_FMTS if f.signed], ids=str)
+def test_signed_encode_matches_grid_oracle(fmt):
+    x = _probe_values(fmt)
+    xs = np.concatenate([x, -x, [-0.0]])
+    np.testing.assert_array_equal(
+        fmt.encode_nearest(xs), fmt.encode_nearest_grid(xs), err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_fused_round_matches_encode_decode(fmt):
+    """quantize_payload (no code assembly) == decode(encode(x)), bitwise."""
+    x = _probe_values(fmt)
+    np.testing.assert_array_equal(
+        fmt.quantize_payload(x),
+        fmt.decode_payload(fmt.encode_payload_nearest(x)), err_msg=str(fmt))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=str)
+def test_closed_form_max_value_matches_grid(fmt):
+    assert fmt.max_value == fmt.payload_grid[-1], str(fmt)
+
+
+def test_encode_never_builds_grid():
+    """The encode path must not touch the cached grid properties."""
+    fmt = F2PFormat(16, 2, Flavor.SR, signed=True)  # fresh instance
+    fmt.encode_nearest(np.linspace(-3.0, 3.0, 1000))
+    fmt.quantize_value(np.linspace(-3.0, 3.0, 1000))
+    built = set(fmt.__dict__) & {"payload_grid", "grid", "_values_by_code",
+                                 "_code_by_rank"}
+    assert not built, f"encode materialized {built}"
+
+
+def test_blockwise_chunking_is_transparent():
+    """Results identical across the cache-block boundary (and shape kept)."""
+    fmt = F2PFormat(8, 2, Flavor.LR, signed=True)
+    rng = np.random.default_rng(3)
+    big = rng.normal(0, 2, size=(300, 400))  # 120k elems > one 32k block
+    got = fmt.encode_nearest(big)
+    assert got.shape == big.shape
+    np.testing.assert_array_equal(got.ravel(),
+                                  fmt.encode_nearest(big.ravel()))

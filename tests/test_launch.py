@@ -18,8 +18,9 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def test_sanitize_spec_drops_nondivisible():
     from repro.launch.shardings import sanitize_spec
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh((1,), ("model",))
 
     # fake a 16-wide axis via a mesh dict stub
     class M:
@@ -86,8 +87,8 @@ from repro.configs import smoke_config
 from repro.launch import roofline as RL
 from repro.launch.dryrun import lower_cell
 from repro.launch.shardings import rules_for
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 2), ("data", "model"))
 import repro.configs.registry as REG
 # mutate in place: the dict object is shared across module bindings
 REG.SHAPES["train_4k"] = (64, 4, "train")
