@@ -1,0 +1,149 @@
+"""Bench-regression gate (CI): compare the latest benchmark entry in
+``benchmarks/BENCH_kernels.json`` against the checked-in baseline medians and
+fail on any slowdown beyond the threshold.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--trajectory benchmarks/BENCH_kernels.json] [--threshold 2.5]
+
+Semantics:
+
+  * the *candidate* is the last trajectory entry (the one the CI quick-bench
+    run just appended);
+  * the *baseline* is the per-metric median over every earlier entry with the
+    same ``quick`` flag (quick and full sweeps use different input sizes for
+    some benches — they are not comparable and never mixed);
+  * metrics are the numeric leaves whose key ends in ``_us`` (lower is
+    better) or ``_per_s`` (higher is better); anything else (counts, shapes,
+    derived ratios) is ignored. The single-rep table jobs (``table5_us``,
+    ``table6_us``) are recorded for offline trend analysis but NOT gated:
+    one-shot wall times of seconds-long numpy jobs jitter past any sane
+    threshold on shared boxes (the checked-in baseline itself spans 3x on
+    ``table5_us``);
+  * a metric regresses when it is worse than ``threshold``x the baseline
+    median; any regression fails the gate (exit 1) with a table of
+    offenders. Metrics present on only one side are reported, not failed —
+    new benches need a first run to seed their baseline.
+
+CI timing noise note: the 2.5x default is deliberately loose. Shared runners
+jitter 10-50%; the gate exists to catch order-of-magnitude mistakes (async
+timing bugs, accidental interpreter-mode defaults, O(grid) regressions), not
+5% drifts — the trajectory file keeps full history for finer offline
+analysis.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from statistics import median
+
+DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "BENCH_kernels.json")
+
+# metric-key suffix -> direction ("low" = lower is better)
+_SUFFIXES = {"_us": "low", "_per_s": "high"}
+
+# single-rep table jobs: trajectory-recorded, never gated (see module doc)
+_UNGATED_PREFIXES = ("table5_us", "table6_us")
+
+
+def flatten_metrics(entry: dict) -> dict[str, tuple[float, str]]:
+    """{dotted.path: (value, direction)} for every comparable numeric leaf."""
+    out: dict[str, tuple[float, str]] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}.{k}" if path else str(k))
+            return
+        if not isinstance(node, (int, float)) or isinstance(node, bool):
+            return
+        if path.startswith(_UNGATED_PREFIXES):
+            return
+        # the timing suffix may sit on the leaf key or on a parent key
+        # (e.g. "host_encode": {"8": {"closed_form_us": ...}}) —
+        # nearest-to-leaf segment wins
+        for seg in reversed(path.split(".")):
+            for suffix, direction in _SUFFIXES.items():
+                if seg.endswith(suffix):
+                    out[path] = (float(node), direction)
+                    return
+
+    walk(entry, "")
+    return out
+
+
+def compare(baseline_entries: list[dict], candidate: dict,
+            threshold: float) -> tuple[list[dict], list[str]]:
+    """(regressions, notes). A regression dict has metric/baseline/fresh/
+    ratio keys; notes cover metrics lacking a comparable counterpart."""
+    cand = flatten_metrics(candidate)
+    base: dict[str, list[float]] = {}
+    directions: dict[str, str] = {}
+    for e in baseline_entries:
+        for k, (v, d) in flatten_metrics(e).items():
+            base.setdefault(k, []).append(v)
+            directions[k] = d
+
+    regressions, notes = [], []
+    for k, (fresh, direction) in sorted(cand.items()):
+        if k not in base:
+            notes.append(f"new metric (no baseline yet): {k} = {fresh:.1f}")
+            continue
+        med = median(base[k])
+        if med <= 0 or fresh <= 0:
+            notes.append(f"non-positive sample skipped: {k}")
+            continue
+        ratio = fresh / med if direction == "low" else med / fresh
+        if ratio > threshold:
+            regressions.append({"metric": k, "baseline_median": med,
+                                "fresh": fresh, "slowdown": ratio})
+    for k in sorted(set(base) - set(cand)):
+        notes.append(f"metric missing from fresh run: {k}")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trajectory", default=DEFAULT_TRAJECTORY,
+                    help="trajectory JSON (benchmarks/BENCH_kernels.json)")
+    ap.add_argument("--threshold", type=float, default=2.5,
+                    help="fail when a median slows down more than this factor")
+    args = ap.parse_args(argv)
+
+    with open(args.trajectory) as f:
+        traj = json.load(f)
+    entries = traj.get("entries", [])
+    if len(entries) < 2:
+        print("bench-regression gate: <2 trajectory entries, nothing to "
+              "compare — PASS (seed the baseline by committing a run)")
+        return 0
+
+    candidate = entries[-1]
+    baseline = [e for e in entries[:-1]
+                if bool(e.get("quick")) == bool(candidate.get("quick"))]
+    if not baseline:
+        print("bench-regression gate: no baseline entries with matching "
+              f"quick={bool(candidate.get('quick'))} flag — PASS "
+              "(commit one to arm the gate)")
+        return 0
+
+    regressions, notes = compare(baseline, candidate, args.threshold)
+    for n in notes:
+        print(f"  note: {n}")
+    print(f"bench-regression gate: candidate {candidate.get('utc', '?')} vs "
+          f"{len(baseline)} baseline entr{'y' if len(baseline) == 1 else 'ies'}"
+          f", threshold {args.threshold:.2f}x")
+    if not regressions:
+        print("  all medians within threshold — PASS")
+        return 0
+    print("  REGRESSIONS:")
+    for r in regressions:
+        print(f"    {r['metric']}: {r['baseline_median']:.1f} -> "
+              f"{r['fresh']:.1f} ({r['slowdown']:.2f}x worse)")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -157,6 +157,71 @@ def bench_kernels(quick=False, warmup=1, reps=3):
     return out
 
 
+def bench_sketch(quick=False, warmup=1, reps=3):
+    """F2P sketch engine: batched ingest throughput (arrivals/s) on the
+    dispatch backends, plus on-arrival accuracy of the device counter path
+    against the ``counters.py`` closed-form oracle."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.counters import f2p_li_grid, on_arrival_mse
+    from repro.kernels import dispatch
+    from repro.kernels import f2p_counter as FC
+    from repro.sketch import F2PSketch, SketchConfig
+
+    out = {}
+    B = 1 << 18
+    rng = np.random.default_rng(0)
+    # zipf-skewed packet trace over a 64k flow space (heavy head + long tail)
+    keys = (rng.zipf(1.1, size=B).astype(np.int64) * 0x9E3779B1) % (1 << 16)
+    counts = np.ones(B, dtype=np.float32)
+
+    backends = ["xla"] if quick else ["xla", "pallas_interpret"]
+    if dispatch.pallas_variant() == dispatch.PALLAS:
+        backends.append("pallas")
+    for b in backends:
+        sk = F2PSketch(SketchConfig(depth=4, width=4096, n_bits=8,
+                                    backend=b))
+        # steady state: the first batches pay the dense grid head (many
+        # advance sweeps per cell); production ingest doesn't
+        for _ in range(4):
+            sk.update(keys, counts)
+
+        def ingest():
+            sk.update(keys, counts)
+            return sk.state
+
+        us, _ = timeit(ingest, warmup=warmup, reps=reps)
+        aps = B / (us / 1e6)
+        print(f"sketch_ingest_{b}_256k,{us:.0f},arrivals_per_s={aps/1e6:.1f}M")
+        out[b] = {"ingest_us": us, "arrivals_per_s": aps,
+                  "batch": B, "depth": 4, "width": 4096}
+
+    # on-arrival accuracy: per-arrival device updates of 4096 independent
+    # cells vs the closed-form oracle prediction for the same grid
+    n_arrivals = 256 if quick else 512
+    cells = 4096
+    grid = f2p_li_grid(8)
+    p, run, logq = (jnp.asarray(t) for t in FC.advance_tables(grid))
+    state = jnp.zeros((cells,), jnp.int32)
+    one = jnp.ones((cells,), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    glut = jnp.asarray(grid, jnp.float32)
+    sq_err = 0.0
+    for i in range(n_arrivals):
+        key, sub = jax.random.split(key)
+        state, _ = FC.counter_advance_xla(state, one, p, run, logq, sub)
+        est = np.asarray(FC.counter_estimate_xla(state, glut), np.float64)
+        sq_err += float(((est - (i + 1)) ** 2).mean())
+    dev_mse = sq_err / n_arrivals
+    oracle_mse = on_arrival_mse(grid, n_arrivals, trials=16, seed=0)
+    ratio = dev_mse / max(oracle_mse, 1e-12)
+    print(f"sketch_on_arrival_mse,{dev_mse*1000:.1f},vs_oracle={ratio:.2f}x")
+    out["on_arrival"] = {"device_mse": dev_mse, "oracle_mse": oracle_mse,
+                         "n_arrivals": n_arrivals, "cells": cells}
+    return out
+
+
 def bench_compression(quick=False, **_):
     """Gradient-compression quality: relative error + wire-byte savings."""
     import jax.numpy as jnp
@@ -205,6 +270,7 @@ BENCHES = {
     "fig1": bench_fig1,
     "host_encode": bench_host_encode,
     "kernels": bench_kernels,
+    "sketch": bench_sketch,
     "compression": bench_compression,
     "kv_quality": bench_kv_quality,
 }
@@ -220,6 +286,7 @@ def _append_trajectory(results: dict, args) -> None:
         "reps": args.reps,
         "host_encode": results.get("host_encode"),
         "kernels": results.get("kernels"),
+        "sketch": results.get("sketch"),
         "table5_us": (results.get("table5") or {}).get("us"),
         "table6_us": {k: v["us"] for k, v in
                       (results.get("table6") or {}).items()},
@@ -265,7 +332,7 @@ def main() -> None:
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
-    if {"host_encode", "kernels"} & set(names):
+    if {"host_encode", "kernels", "sketch"} & set(names):
         _append_trajectory(results, args)
 
 

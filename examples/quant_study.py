@@ -28,8 +28,6 @@ def trained_weights():
     steps = sorted(glob.glob(os.path.join(ckpt, "step_*", "index.json")))
     if not steps:
         return None
-    from repro.train import checkpoint as CK
-    import jax
 
     # restore raw arrays without needing the model structure: read index,
     # dequantizing F2P16-compressed leaves (the big weight matrices)

@@ -21,7 +21,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import DataConfig, host_batch
 from repro.models.config import ModelConfig, dense_pattern

@@ -8,9 +8,7 @@ building ShapeDtypeStruct stand-ins for any (arch, shape).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from typing import Any
 
 import jax
 import jax.numpy as jnp

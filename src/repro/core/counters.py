@@ -46,18 +46,28 @@ def f2p_si_grid(n_bits: int, h_bits: int = 2) -> np.ndarray:
 
 
 def morris_grid(n_bits: int, a: float) -> np.ndarray:
-    """Morris'78 counter: estimate after c increments is a((1+1/a)^c - 1)."""
+    """Morris'78 counter: estimate after c increments is a((1+1/a)^c - 1).
+
+    Extreme ``a`` (tune_morris bisection probes) overflow the exponential;
+    those entries clamp to the largest finite float64 — the grid saturates
+    there instead of going inf (inf gaps turn downstream ``on_arrival_mse``
+    sums into silent NaN)."""
     c = np.arange(1 << n_bits, dtype=np.float64)
-    with np.errstate(over="ignore"):  # extreme `a` during tuning -> inf is fine
-        return a * (np.exp(np.log1p(1.0 / a) * c) - 1.0)
+    with np.errstate(over="ignore"):  # extreme `a` during tuning -> clamp
+        g = a * (np.exp(np.log1p(1.0 / a) * c) - 1.0)
+    return np.minimum(g, np.finfo(np.float64).max)
 
 
 def cedar_grid(n_bits: int, delta: float) -> np.ndarray:
-    """CEDAR (Tsidon et al., INFOCOM'12): L_i = ((1+2d^2)^i - 1)/(2d^2)."""
+    """CEDAR (Tsidon et al., INFOCOM'12): L_i = ((1+2d^2)^i - 1)/(2d^2).
+
+    Overflowing entries clamp to the largest finite float64 (see
+    ``morris_grid``)."""
     i = np.arange(1 << n_bits, dtype=np.float64)
     d2 = 2.0 * delta * delta
-    with np.errstate(over="ignore"):  # extreme delta during tuning -> inf ok
-        return (np.exp(np.log1p(d2) * i) - 1.0) / d2
+    with np.errstate(over="ignore"):  # extreme delta during tuning -> clamp
+        g = (np.exp(np.log1p(d2) * i) - 1.0) / d2
+    return np.minimum(g, np.finfo(np.float64).max)
 
 
 def sead_grid(n_bits: int) -> np.ndarray:
@@ -77,7 +87,10 @@ def _sq_sum(c: np.ndarray, a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
     hi = c - a
     lo = c - b - 1.0
-    out = F(hi) - F(lo)
+    # lanes with b < a are masked out below; on overflow-clamped grids their
+    # F() intermediates can overflow/NaN before the mask applies
+    with np.errstate(over="ignore", invalid="ignore"):
+        out = F(hi) - F(lo)
     return np.where(b < a, 0.0, out)
 
 
@@ -86,8 +99,19 @@ def on_arrival_mse(grid: np.ndarray, n_arrivals: int, *, trials: int = 16,
     """Mean on-arrival MSE of a grid counter over `trials` independent runs."""
     g = np.asarray(grid, dtype=np.float64)
     gaps = np.diff(g)
-    if np.any(gaps <= 0):
-        raise ValueError("grid must be strictly increasing")
+    if np.any(gaps < 0):
+        raise ValueError("grid must be non-decreasing")
+    if np.any(gaps == 0):
+        # overflow-clamped tail (morris/cedar under extreme tuning params):
+        # the counter can never leave the first clamped state, so the grid
+        # truncates there — the saturation branch below covers the rest
+        cut = int(np.argmax(gaps == 0))
+        if np.any(np.diff(g[cut:]) != 0):
+            raise ValueError("grid must be strictly increasing away from a "
+                             "saturated (clamped) tail")
+        g, gaps = g[:cut + 1], gaps[:cut]
+        if len(gaps) == 0:
+            raise ValueError("grid saturates at its first state")
     p = np.minimum(1.0 / gaps, 1.0)
     rng = np.random.default_rng(seed)
     K = len(gaps)
@@ -104,7 +128,8 @@ def on_arrival_mse(grid: np.ndarray, n_arrivals: int, *, trials: int = 16,
         # within budget) bumps it to g[k+1]
         err = _sq_sum(g[:-1], s, np.minimum(e, ends - 1.0))
         bumped = ends <= n_arrivals
-        err += np.where(bumped, (g[1:] - ends) ** 2, 0.0)
+        with np.errstate(over="ignore"):  # unreachable clamped-top squares
+            err += np.where(bumped, (g[1:] - ends) ** 2, 0.0)
         # if the counter saturates before n_arrivals, remaining arrivals sit at g[-1]
         used = ends[-1]
         if used < n_arrivals:
@@ -171,12 +196,12 @@ class CounterArray:
             while remaining > 0 and k < len(self.gaps):
                 gap = self.gaps[k]
                 p = min(1.0 / gap, 1.0)
-                # arrivals needed to advance ~ Geometric(p); consume in bulk
+                # arrivals needed to advance ~ Geometric(p); consume in bulk.
+                # A sojourn exceeding the budget means no advance happens
+                # within it — stop (an extra Bernoulli here would double-count
+                # the escape probability: P(advance) must stay 1-(1-p)^n).
                 need = self.rng.geometric(p)
                 if need > remaining:
-                    # may still advance with the partial budget
-                    if self.rng.random() < 1.0 - (1.0 - p) ** remaining:
-                        k += 1
                     remaining = 0
                 else:
                     remaining -= int(need)

@@ -1,0 +1,34 @@
+"""Shared uint32 bit-mix primitives (murmur3 finalizer), jnp + numpy twins.
+
+The single home of the avalanche mix used by the sketch row hashes
+(``repro.sketch.hashing``) and the counter-advance uniform stream
+(``repro.kernels.f2p_counter``): the constants are load-bearing
+(DESIGN.md §6.2) and the device/host implementations must stay
+bit-identical, so there is exactly one copy of each.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fmix32", "fmix32_np"]
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer: full-avalanche mix of a uint32 lane (jnp)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def fmix32_np(x: np.ndarray) -> np.ndarray:
+    """Bit-identical numpy twin of :func:`fmix32` (host aggregation path)."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x

@@ -26,7 +26,14 @@ Resolution order when no backend is requested:
 
 Ops register per-backend implementations with :func:`register`; callers go
 through :func:`lookup`, which resolves the backend *and* validates that the
-op actually has an implementation for it.
+op actually has an implementation for it. Registered ops:
+
+  ``quantize`` / ``dequantize``            block-scaled F2P tensor codecs
+                                           (``kernels/f2p_quant.py``)
+  ``counter_advance`` / ``counter_estimate``  batched probabilistic grid-counter
+                                           updates + decode-LUT estimate reads
+                                           for the sketch engine
+                                           (``kernels/f2p_counter.py``)
 """
 from __future__ import annotations
 

@@ -22,7 +22,6 @@ is the f32 division by the scale, identical in both paths.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

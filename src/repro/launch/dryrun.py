@@ -18,7 +18,6 @@ NOTE: the XLA_FLAGS line above MUST run before any jax import (device count
 locks on first init); keep it the first statement of this module.
 """
 import argparse
-import functools
 import json
 import time
 import traceback
@@ -30,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (ARCH_IDS, SHAPES, full_config, input_specs,
                            shape_is_applicable)
 from repro.launch import roofline as RL
-from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.shardings import (caches_sds, params_sds, rules_for,
                                     train_state_sds)
 from repro.models import decode_step, prefill

@@ -16,7 +16,6 @@ import dataclasses
 import json
 import time
 
-import jax
 
 from repro.configs import SHAPES, full_config
 from repro.launch import roofline as RL

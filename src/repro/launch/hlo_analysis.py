@@ -20,7 +20,6 @@ no conv HLOs); rng/transcendental flops ignored (negligible vs matmuls).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

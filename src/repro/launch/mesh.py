@@ -38,3 +38,10 @@ def make_host_mesh(n: int | None = None, name: str = "data"):
     """Small helper mesh over whatever devices exist (tests/examples)."""
     devs = jax.devices() if n is None else jax.devices()[:n]
     return compat_make_mesh((len(devs),), (name,))
+
+
+def make_sketch_mesh(n: int | None = None):
+    """1-D mesh for row-sharding a sketch's (depth, width) register state
+    (``repro.sketch``). Rows are hash-independent, so the sketch update runs
+    with zero cross-device traffic; ``n`` must divide the sketch depth."""
+    return make_host_mesh(n, name="rows")

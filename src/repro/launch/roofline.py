@@ -25,9 +25,7 @@ alongside — `collective_bytes_naive`.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s / chip

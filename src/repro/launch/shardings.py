@@ -6,10 +6,8 @@ models.sharding does for params)."""
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import data_axes

@@ -44,7 +44,7 @@ def main():
     from repro.configs import full_config, smoke_config
     from repro.data import DataConfig, host_batch
     from repro.launch.shardings import rules_for, train_state_sds
-    from repro.models.sharding import logical_rules, param_specs
+    from repro.models.sharding import logical_rules
     from repro.optim import AdamWConfig, CompressionConfig
     from repro.train import checkpoint, init_train_state, make_train_step
     from repro.train.async_ckpt import AsyncCheckpointer

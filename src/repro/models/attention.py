@@ -7,8 +7,6 @@ Cache: dict with "k"/"v" [B, K, Smax, hd] (bf16) or F2P8 codes+scales
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

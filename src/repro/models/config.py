@@ -9,7 +9,7 @@ stay scannable and compile in O(pattern) HLO.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Sequence
+from typing import Literal
 
 import jax.numpy as jnp
 

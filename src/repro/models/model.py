@@ -7,7 +7,6 @@ bounded for the 512-device dry-run). Optional remat on the scan body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

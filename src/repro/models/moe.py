@@ -42,7 +42,6 @@ def moe_apply(params, x, cfg, sp: bool = False):
 
     sp=True: caller runs sequence parallelism — the shared expert stays
     token-sharded (weight-gathered) instead of ff-sharded."""
-    from repro.models.sharding import constrain
 
     B, S, D = x.shape
     E, k = cfg.n_experts, cfg.experts_per_token

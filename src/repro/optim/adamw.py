@@ -6,7 +6,6 @@ over data axes too — ZeRO-style — via launch.shard_rules)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -25,8 +25,6 @@ short-tailed; paper Table VI shows SR wins on such tensors).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

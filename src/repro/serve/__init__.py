@@ -1,1 +1,2 @@
-from repro.serve.engine import ServeConfig, Engine, make_serve_step, make_prefill_step
+from repro.serve.engine import (Engine, ServeConfig, SketchIngestEngine,
+                                make_prefill_step, make_serve_step)

@@ -1,5 +1,6 @@
 """Serving: jittable prefill / decode step factories + a batched request
-engine with (optionally F2P8-quantized) KV cache.
+engine with (optionally F2P8-quantized) KV cache, and the streaming
+packet-ingest front end of the F2P sketch engine (DESIGN.md §6.4).
 
 serve_step here is what the decode_* and long_* dry-run shapes lower:
 one new token against a KV cache of `max_seq` (the assignment's definition).
@@ -72,3 +73,104 @@ class Engine:
             if eos >= 0 and bool((np.concatenate(out, 1) == eos).any(1).all()):
                 break
         return np.concatenate(out, axis=1)
+
+
+class SketchIngestEngine:
+    """Streaming front end of the F2P sketch: packets in, reports out.
+
+    Callers hand over chunks of flow keys (one entry per packet arrival,
+    any chunk size); the engine re-batches them into fixed-size device
+    batches — the sketch's jitted update step compiles once for that shape —
+    updates the sketch, and feeds a bounded heavy-hitter candidate table
+    with each batch's most frequent keys and their fresh sketch estimates.
+    Short remainders are zero-count padded at ``flush`` time, so totals are
+    exact regardless of how arrivals were chunked.
+    """
+
+    def __init__(self, sketch, batch: int = 1 << 16, track_top: int = 256):
+        from repro.telemetry import HeavyHitterTable
+
+        self.sketch = sketch
+        self.batch = int(batch)
+        self._buf = np.empty(self.batch, dtype=np.int64)
+        self._fill = 0
+        self.packets = 0
+        self.batches = 0
+        self.hh = HeavyHitterTable(capacity=track_top)
+
+    def ingest(self, keys: np.ndarray) -> None:
+        """Buffer packet keys; every full device batch is flushed eagerly."""
+        keys = np.asarray(keys).ravel()
+        pos = 0
+        while pos < keys.size:
+            take = min(keys.size - pos, self.batch - self._fill)
+            self._buf[self._fill:self._fill + take] = keys[pos:pos + take]
+            self._fill += take
+            pos += take
+            if self._fill == self.batch:
+                self._fill = 0
+                self._dispatch(self._buf, np.ones(self.batch, np.float32))
+
+    def flush(self) -> None:
+        """Push the partial tail batch (zero-count padded to full shape) and
+        drain budget the fixed-sweep (Pallas) backends carried between
+        batches — estimates read after a flush must reflect every packet."""
+        if self._fill:
+            keys = np.zeros(self.batch, dtype=np.int64)
+            counts = np.zeros(self.batch, dtype=np.float32)
+            keys[:self._fill] = self._buf[:self._fill]
+            counts[:self._fill] = 1.0
+            self._fill = 0
+            self._dispatch(keys, counts)
+        self.sketch.flush()
+        # the drain advanced cells the candidate table was last told about
+        # pre-drain — refresh its estimates or the report undercounts
+        # exactly the heaviest (most-carried) flows
+        keys = self.hh.keys
+        if keys.size:
+            # same padded shape as _dispatch -> the jitted query step really
+            # does compile once
+            padded = np.zeros(4 * self.hh.capacity, dtype=np.int64)
+            padded[:keys.size] = keys
+            self.hh.offer(keys, self.sketch.query(padded)[:keys.size])
+
+    def _dispatch(self, keys: np.ndarray, counts: np.ndarray) -> None:
+        # pre-combine once and feed the sketch the (unique key, count) pairs
+        # — the candidate scan needs the combine anyway, and the sketch's own
+        # host pre-combine then runs over uniques instead of the raw batch
+        live = keys[counts > 0]
+        uniq, cnt = np.unique(live, return_counts=True)
+        if uniq.size == 0:
+            return
+        self.sketch.update(uniq, cnt.astype(np.float32))
+        self.packets += int(cnt.sum())
+        self.batches += 1
+        # candidate refresh: the batch's most frequent keys, re-estimated
+        # against the updated sketch (sketch+heap heavy-hitter recovery).
+        # Queries go out zero-padded to a fixed shape — jit compiles the
+        # query step once, not once per distinct unique-key count.
+        cap = 4 * self.hh.capacity
+        if uniq.size > cap:
+            keep = np.argsort(cnt)[::-1][:cap]
+            uniq = uniq[keep]
+        if uniq.size:
+            padded = np.zeros(cap, dtype=np.int64)
+            padded[:uniq.size] = uniq
+            est = self.sketch.query(padded)[:uniq.size]
+            self.hh.offer(uniq, est)
+
+    def heavy_hitters(self, k: int = 20, min_share: float = 0.0):
+        """Top-k flow report against the exact ingested-packet total."""
+        return self.hh.report(k, total_arrivals=float(self.packets),
+                              min_share=min_share)
+
+    def stats(self) -> dict:
+        return {
+            "packets": self.packets,
+            "batches": self.batches,
+            "buffered": self._fill,
+            "sketch_fill": self.sketch.fill(),
+            "sketch_bytes": self.sketch.nbytes,
+            "backend": self.sketch.backend,
+            "pending_budget": self.sketch.pending_budget,
+        }

@@ -1,0 +1,11 @@
+"""Batched F2P sketch engine: count-min over F2P grid-counter cells with
+device-side probabilistic increments (paper Sec. III-A at traffic scale).
+
+See DESIGN.md §6 for layout, hashing, dispatch policy, and sharding.
+"""
+from repro.sketch.hashing import (fold_u64, hash_rows, hash_rows_np,
+                                  make_hash_params)
+from repro.sketch.sketch import F2PSketch, SketchConfig
+
+__all__ = ["F2PSketch", "SketchConfig", "hash_rows", "hash_rows_np",
+           "make_hash_params", "fold_u64"]

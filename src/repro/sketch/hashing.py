@@ -1,0 +1,55 @@
+"""Row hashing for the sketch engine (DESIGN.md §6.2).
+
+Each sketch row d owns an independent hash ``h_d : key -> [0, width)``:
+a multiply-add in uint32 (wrap-around is the mod-2^32 reduction) followed by
+a murmur3-style avalanche finalizer, then a modulo reduction to the row
+width. The finalizer matters: packet keys are adjacent integers in traces
+and a bare multiply-shift maps them to lattice patterns that correlate
+across rows.
+
+Everything is jnp and shape-polymorphic: ``hash_rows`` runs under jit inside
+the sketch update step and broadcasts to (depth, batch) in one fused pass.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bits import fmix32, fmix32_np
+
+__all__ = ["make_hash_params", "hash_rows", "hash_rows_np", "fold_u64"]
+
+
+def make_hash_params(depth: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row (a, b) multiply-add constants, a forced odd (invertible mod
+    2^32 — keeps the pre-mix a bijection)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 1 << 32, size=depth, dtype=np.uint32) | np.uint32(1)
+    b = rng.integers(0, 1 << 32, size=depth, dtype=np.uint32)
+    return a, b
+
+
+def fold_u64(hi, lo) -> jnp.ndarray:
+    """Fold a (hi, lo) uint32 pair — e.g. a 5-tuple flow id pre-hashed on the
+    host — into one uint32 key without losing either half's entropy."""
+    hi = jnp.asarray(hi).astype(jnp.uint32)
+    lo = jnp.asarray(lo).astype(jnp.uint32)
+    return fmix32(hi * jnp.uint32(0x9E3779B1) ^ lo)
+
+
+def hash_rows(keys: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+              width: int) -> jnp.ndarray:
+    """(batch,) integer keys -> (depth, batch) int32 column indices."""
+    k = jnp.asarray(keys).astype(jnp.uint32)
+    mixed = fmix32(a[:, None] * k[None, :] + b[:, None])
+    return (mixed % jnp.uint32(width)).astype(jnp.int32)
+
+
+def hash_rows_np(keys: np.ndarray, a: np.ndarray, b: np.ndarray,
+                 width: int) -> np.ndarray:
+    """Bit-identical numpy twin of :func:`hash_rows` — the host aggregation
+    fast path (DESIGN.md §6.3) must land arrivals in exactly the cells the
+    device ``query`` path reads back."""
+    k = np.asarray(keys).astype(np.uint32)
+    mixed = fmix32_np(a[:, None] * k[None, :] + b[:, None])
+    return (mixed % np.uint32(width)).astype(np.int32)

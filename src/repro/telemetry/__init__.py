@@ -11,8 +11,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.counters import CounterArray, f2p_li_grid
+from repro.telemetry.heavy_hitters import HeavyHitterTable, HeavyHittersReport
 
-__all__ = ["ExpertLoadTracker", "FlowStats"]
+__all__ = ["ExpertLoadTracker", "FlowStats", "HeavyHitterTable",
+           "HeavyHittersReport"]
 
 
 class ExpertLoadTracker:

@@ -17,12 +17,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import struct
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import msgpack
 import numpy as np
 
 from repro.core.f2p import F2PFormat, Flavor

@@ -8,11 +8,8 @@ math; on the wire-level path the same codes ride reduce_scatter/all_gather —
 see optim.compress.compressed_psum)."""
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import train_forward
 from repro.models.config import ModelConfig

@@ -1,0 +1,77 @@
+"""Unit tests for the CI bench-regression gate (benchmarks/check_regression)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import compare, flatten_metrics, main
+
+
+def _entry(quick=True, **metrics):
+    e = {"utc": "t", "quick": quick}
+    e.update(metrics)
+    return e
+
+
+def test_flatten_picks_only_timing_suffixes():
+    entry = {
+        "quick": True,
+        "kernels": {"xla": {"quantize_us": 100.0, "gbps": 3.0}},
+        "sketch": {"xla": {"arrivals_per_s": 2e7, "batch": 65536}},
+        "host_encode": {"8": {"closed_form_us": 7.0}},
+        "table5_us": 9.0,
+        "table6_us": {"8": 5.0},
+    }
+    flat = flatten_metrics(entry)
+    assert flat["kernels.xla.quantize_us"] == (100.0, "low")
+    assert flat["sketch.xla.arrivals_per_s"] == (2e7, "high")
+    assert flat["host_encode.8.closed_form_us"] == (7.0, "low")
+    assert "sketch.xla.batch" not in flat
+    assert "kernels.xla.gbps" not in flat
+    # single-rep table jobs are recorded but never gated
+    assert "table5_us" not in flat
+    assert "table6_us.8" not in flat
+
+
+def test_compare_directions():
+    base = [_entry(a_us=100.0, b_per_s=1000.0),
+            _entry(a_us=120.0, b_per_s=900.0)]
+    # within threshold both directions
+    regs, _ = compare(base, _entry(a_us=200.0, b_per_s=500.0), 2.5)
+    assert regs == []
+    # _us regression (fresh slower)
+    regs, _ = compare(base, _entry(a_us=500.0, b_per_s=1000.0), 2.5)
+    assert [r["metric"] for r in regs] == ["a_us"]
+    assert regs[0]["baseline_median"] == 110.0
+    # _per_s regression (fresh lower throughput)
+    regs, _ = compare(base, _entry(a_us=100.0, b_per_s=100.0), 2.5)
+    assert [r["metric"] for r in regs] == ["b_per_s"]
+
+
+def test_compare_new_and_missing_metrics_note_not_fail():
+    base = [_entry(a_us=100.0)]
+    regs, notes = compare(base, _entry(c_us=5.0), 2.5)
+    assert regs == []
+    assert any("new metric" in n for n in notes)
+    assert any("missing from fresh" in n for n in notes)
+
+
+def test_main_passes_and_fails(tmp_path):
+    traj = tmp_path / "t.json"
+
+    def write(entries):
+        traj.write_text(json.dumps({"schema": 1, "entries": entries}))
+
+    # <2 entries -> trivially pass
+    write([_entry(a_us=100.0)])
+    assert main(["--trajectory", str(traj)]) == 0
+    # healthy candidate -> pass
+    write([_entry(a_us=100.0), _entry(a_us=110.0)])
+    assert main(["--trajectory", str(traj)]) == 0
+    # regressed candidate -> fail
+    write([_entry(a_us=100.0), _entry(a_us=1000.0)])
+    assert main(["--trajectory", str(traj)]) == 1
+    # quick/full never mixed: full baseline, quick candidate -> pass w/ notice
+    write([_entry(quick=False, a_us=100.0), _entry(quick=True, a_us=9999.0)])
+    assert main(["--trajectory", str(traj)]) == 0

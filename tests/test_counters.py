@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import counters as C
-from repro.core.f2p import F2PFormat, Flavor
 
 
 def test_grids_monotone():

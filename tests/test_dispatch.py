@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.f2p import F2PFormat, Flavor
 from repro.kernels import dispatch, ops
+from repro.kernels import f2p_counter  # noqa: F401  (registers counter ops)
 from repro.kernels import f2p_matmul as FM
 from repro.kernels import f2p_quant as K
 
@@ -27,7 +28,8 @@ def _data(shape=(16, 512), seed=0):
 # resolution policy
 # ---------------------------------------------------------------------------
 def test_all_ops_register_all_backends():
-    for op in ("quantize", "dequantize", "dequant_matmul"):
+    for op in ("quantize", "dequantize", "dequant_matmul",
+               "counter_advance", "counter_estimate"):
         assert set(dispatch.implementations(op)) == set(dispatch.BACKENDS), op
 
 

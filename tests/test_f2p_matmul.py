@@ -1,5 +1,4 @@
 """Fused F2P8-dequant matmul kernel vs pure-jnp oracle: shape/dtype sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,10 +5,8 @@ import subprocess
 import sys
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

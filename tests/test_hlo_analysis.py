@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import HloModule, analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo
 
 
 def _compile_text(fn, *args):

@@ -5,10 +5,9 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import DataConfig, global_batch, host_batch
-from repro.models.config import BlockSpec, ModelConfig
+from repro.models.config import ModelConfig
 from repro.optim import (AdamWConfig, CompressionConfig, compressed_psum,
                          compress_decompress, init_residuals)
 from repro.train import checkpoint, init_train_state, make_train_step
