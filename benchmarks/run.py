@@ -264,6 +264,36 @@ def bench_kv_quality(quick=False, **_):
     return {"drift": float(drift), "top1_match": float(match)}
 
 
+def bench_fl(quick=False, warmup=1, reps=3):
+    """Federated-learning round: steady-state latency and wire bytes/round
+    of F2P8 QTensor client updates vs the f32 baseline on the toy LM."""
+    from repro.fl import ClientConfig, FedAvgConfig, run_fed_avg, toy_task
+
+    task = toy_task()
+    out = {}
+    # warmup rounds (>= 1: the first pays compile) are excluded from the
+    # reported tail median
+    skip = 1 + max(warmup, 0)
+    rounds = skip + max(reps, 1)
+    for name, compress in (("f32", False), ("f2p8", True)):
+        fcfg = FedAvgConfig(n_clients=2 if quick else 4, rounds=rounds,
+                            client=ClientConfig(local_steps=2,
+                                                compress=compress))
+        hist = run_fed_avg(fcfg, task)
+        tail = sorted(hist["round_seconds"][skip:])
+        round_us = tail[len(tail) // 2] * 1e6
+        wire = hist["wire_bytes_per_round"][-1]
+        out[name] = {"round_us": round_us, "wire_bytes": wire,
+                     "final_loss": hist["eval_loss"][-1]}
+    red = out["f32"]["wire_bytes"] / out["f2p8"]["wire_bytes"]
+    out["wire_reduction"] = red
+    print(f"fl_round_f2p8,{out['f2p8']['round_us']:.0f},"
+          f"wire_reduction={red:.2f}x")
+    print(f"fl_round_f32,{out['f32']['round_us']:.0f},"
+          f"wire_bytes={out['f32']['wire_bytes']}")
+    return out
+
+
 BENCHES = {
     "table5": bench_table5,
     "table6": bench_table6,
@@ -273,6 +303,7 @@ BENCHES = {
     "sketch": bench_sketch,
     "compression": bench_compression,
     "kv_quality": bench_kv_quality,
+    "fl": bench_fl,
 }
 
 
@@ -287,6 +318,7 @@ def _append_trajectory(results: dict, args) -> None:
         "host_encode": results.get("host_encode"),
         "kernels": results.get("kernels"),
         "sketch": results.get("sketch"),
+        "fl": results.get("fl"),
         "table5_us": (results.get("table5") or {}).get("us"),
         "table6_us": {k: v["us"] for k, v in
                       (results.get("table6") or {}).items()},
@@ -332,7 +364,7 @@ def main() -> None:
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
-    if {"host_encode", "kernels", "sketch"} & set(names):
+    if {"host_encode", "kernels", "sketch", "fl"} & set(names):
         _append_trajectory(results, args)
 
 

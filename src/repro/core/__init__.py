@@ -3,3 +3,7 @@ from repro.core.formats import (FPFormat, IntFormat, SEADFormat, GridFormat,
                                 fp16, bf16, tf32, named_format)
 from repro.core.quantize import (minmax_quantize, quantization_mse,
                                  block_quantize, block_dequantize, BlockQuantized)
+# NOTE: qtensor.quantize/dequantize are not re-exported bare — they would
+# shadow the `repro.core.quantize` submodule attribute on the package.
+from repro.core.qtensor import (QTensor, block_scales, quantize_tree,
+                                dequantize_tree)

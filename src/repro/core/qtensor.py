@@ -1,0 +1,276 @@
+"""QTensor: the first-class F2P block-quantized tensor (DESIGN.md §7).
+
+The codes + per-block-scales representation used to be re-derived ad hoc at
+six call sites (gradient compression ×2, the KV cache, checkpoint payloads,
+and two host duplicates). This module is now the ONE place that owns it:
+
+  * ``QTensor`` — packed codes, per-block f32 scales, the ``F2PFormat``, the
+    logical shape, and the block size. Registered as a jax pytree: codes and
+    scales are leaves (they jit / shard_map / scan / all_gather like any
+    array), format/block/shape are static aux data (they hash into the jit
+    cache key, so a format change recompiles instead of miscomputing).
+  * ``quantize`` / ``dequantize`` — the canonical blockwise absmax-scaled
+    codec pair, routed through the kernel dispatch registry
+    (``repro.kernels.dispatch``): compiled Pallas on TPU, fused-XLA tile math
+    on CPU and inside traces, interpret-mode Pallas on request.
+  * ``block_scales`` — the single blockwise absmax -> scale implementation in
+    ``src/`` (everything outside test oracles routes through it).
+  * ``QTensor.from_parts`` — zero-copy reassembly for wire/storage paths
+    (all_gathered leaves, checkpoint buffers) with shape validation.
+
+Layout: only the LAST axis is blocked. ``codes`` has the logical shape with
+the last dim padded up to a block multiple; ``scales`` replaces the last dim
+with the block count. Leading dims are never merged on the trace path —
+reshaping sharded leading dims would force GSPMD to all-gather the full f32
+tensor just to reflow it, so every leading-dim sharding survives quantization
+(the property ``optim.compress`` and the KV cache rely on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.f2p import F2PFormat
+
+__all__ = ["QTensor", "quantize", "dequantize", "block_scales",
+           "quantize_tree", "dequantize_tree"]
+
+
+def block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str = "f32"):
+    """Per-block scales from ``[..., nblocks, block]`` f32 data.
+
+    The ONE blockwise absmax-scale implementation (scale maps each block's
+    absmax onto ``fmt.max_value``; all-zero blocks get scale 1 so their codes
+    decode to exact zeros). Shared verbatim by the Pallas kernel body, the
+    fused-XLA backend, and every QTensor producer — bitwise-identical scales
+    everywhere are what make the cross-backend parity tests exact."""
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    # multiply by reciprocal constant: XLA const-folds `x / const` into this
+    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
+    scale = absmax * jnp.float32(1.0 / fmt.max_value)
+    if scale_mode == "pow2":
+        # round scale UP to a power of two => exact division, deterministic
+        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+    return jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """An F2P block-quantized tensor: codes + per-block scales + static meta.
+
+    ``shape`` is the LOGICAL shape (before last-axis padding). Leading dims of
+    ``codes``/``scales`` may legitimately differ from ``shape[:-1]`` while a
+    transform is restructuring them (scan stacking, broadcast_to over a group
+    axis, vmap) — ``logical_shape`` re-derives the effective shape from the
+    live leaves so ``dequantize`` stays correct either way."""
+
+    __slots__ = ("codes", "scales", "fmt", "block", "shape")
+
+    def __init__(self, codes, scales, fmt: F2PFormat, block: int, shape):
+        self.codes, self.scales = codes, scales
+        self.fmt, self.block, self.shape = fmt, int(block), tuple(shape)
+
+    # ---- construction ------------------------------------------------------
+    @classmethod
+    def from_parts(cls, codes, scales, fmt: F2PFormat, block: int,
+                   shape) -> "QTensor":
+        """Zero-copy reassembly (wire receive, checkpoint restore).
+
+        Validates the leaf shapes against the declared logical shape — a
+        mismatched wire payload fails loudly here instead of broadcasting."""
+        shape = tuple(shape)
+        block = int(block)
+        n = shape[-1]
+        npad = -(-n // block) * block
+        if codes.shape[-1] != npad:
+            raise ValueError(
+                f"codes last dim {codes.shape[-1]} != padded logical dim "
+                f"{npad} (shape {shape}, block {block})")
+        if scales.shape[-1] * block != npad:
+            raise ValueError(
+                f"scales last dim {scales.shape[-1]} does not cover "
+                f"{npad} padded elements at block {block}")
+        if codes.shape[:-1] != scales.shape[:-1]:
+            raise ValueError(
+                f"codes/scales leading dims disagree: {codes.shape} vs "
+                f"{scales.shape}")
+        return cls(codes, scales, fmt, block, shape)
+
+    # ---- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.fmt, self.block, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def logical_shape(self) -> tuple:
+        """Effective logical shape, tolerant of restructured leading dims."""
+        if self.codes.shape[:-1] == self.shape[:-1]:
+            return self.shape
+        return tuple(self.codes.shape[:-1]) + (self.shape[-1],)
+
+    @property
+    def nblocks(self) -> int:
+        return self.scales.shape[-1]
+
+    @property
+    def nbytes(self) -> int:
+        """Wire/storage footprint of the compressed representation."""
+        return (self.codes.size * self.codes.dtype.itemsize
+                + self.scales.size * self.scales.dtype.itemsize)
+
+    def dequantize(self, dtype=jnp.float32, backend: str | None = None):
+        return dequantize(self, dtype=dtype, backend=backend)
+
+    def scale_by(self, factor) -> "QTensor":
+        """Fold a multiplicative factor (mean weight, lr) into the scales —
+        the dequantize side then needs no extra multiply (wire-path trick
+        used by ``compressed_psum`` and the FL server)."""
+        return QTensor(self.codes,
+                       self.scales * jnp.asarray(factor, jnp.float32),
+                       self.fmt, self.block, self.shape)
+
+    def dynamic_update(self, other: "QTensor", start, axis: int) -> "QTensor":
+        """In-place-style update of a leading-axis slice (KV-cache writes):
+        both leaves are updated coherently at ``start`` along ``axis``."""
+        if (other.fmt, other.block) != (self.fmt, self.block):
+            raise ValueError(f"format mismatch: {other.fmt}/{other.block} "
+                             f"into {self.fmt}/{self.block}")
+        ax = axis % self.codes.ndim
+        if ax == self.codes.ndim - 1:
+            raise ValueError("cannot dynamic_update along the blocked axis")
+        upd = jax.lax.dynamic_update_slice_in_dim
+        return QTensor(upd(self.codes, other.codes, start, ax),
+                       upd(self.scales, other.scales, start, ax),
+                       self.fmt, self.block, self.shape)
+
+    def __repr__(self):
+        return (f"QTensor({self.logical_shape}, fmt={self.fmt}, "
+                f"block={self.block})")
+
+
+# ---------------------------------------------------------------------------
+# Canonical codec pair (dispatch-routed)
+# ---------------------------------------------------------------------------
+def _pad_last(x, block):
+    pad = (-x.shape[-1]) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def _quantize_xla_nd(x32, fmt: F2PFormat, block: int, scale_mode: str):
+    """Shape-preserving fused tile math (leading dims untouched). Jitted so
+    eager callers don't pay op-by-op dispatch; inlines under outer traces."""
+    from repro.kernels import f2p_quant as K
+
+    xb = x32.reshape(*x32.shape[:-1], -1, block)
+    scales = block_scales(xb, fmt, scale_mode)
+    y = (xb / scales[..., None]).astype(jnp.float32)
+    return K.quantize_tile_math(y.reshape(x32.shape), fmt), scales
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def _dequantize_xla_nd(codes, scales, fmt: F2PFormat, block: int):
+    from repro.kernels import f2p_quant as K
+
+    if fmt.n_bits <= 8:  # LUT gather beats bit math on CPU (§3.3)
+        vals = K.dequantize_lut(codes, fmt, jnp.float32)
+    else:
+        vals = K.dequantize_tile_math(codes, fmt, jnp.float32)
+    vb = vals.reshape(*vals.shape[:-1], -1, block) * scales[..., None]
+    return vb.reshape(vals.shape)
+
+
+def quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
+             scale_mode: str = "f32", backend: str | None = None) -> QTensor:
+    """Blockwise absmax-scaled F2P quantization of any-rank ``x`` along its
+    last axis. Returns a :class:`QTensor`.
+
+    Backend routing (``repro.kernels.dispatch``): the fused-XLA path runs
+    shape-preserving tile math — leading dims are NEVER merged, so sharded
+    leading axes keep their shardings under jit/shard_map. The Pallas paths
+    collapse to the kernels' 2D tile layout (host/TPU entry points) and
+    produce bitwise-identical codes and scales."""
+    from repro.kernels import dispatch
+    from repro.kernels import f2p_quant as K  # noqa: F401 (registers backends)
+
+    shape = x.shape
+    b = dispatch.resolve_backend(backend, op="quantize")
+    x32 = _pad_last(x.astype(jnp.float32), block)
+    if b == dispatch.XLA:
+        codes, scales = _quantize_xla_nd(x32, fmt, block, scale_mode)
+        return QTensor(codes, scales, fmt, block, shape)
+    # Pallas kernels want (rows % 8, cols) 2D tiles
+    _, fn = dispatch.lookup("quantize", b)
+    lead = int(x32.size // x32.shape[-1])
+    x2 = x32.reshape(lead, x32.shape[-1])
+    pad_r = (-lead) % 8
+    if pad_r:
+        x2 = jnp.pad(x2, ((0, pad_r), (0, 0)))
+    codes2, scales2 = fn(x2, fmt, block=block, scale_mode=scale_mode)
+    codes = codes2[:lead].reshape(*shape[:-1], x32.shape[-1])
+    scales = scales2[:lead].reshape(*shape[:-1], x32.shape[-1] // block)
+    return QTensor(codes, scales, fmt, block, shape)
+
+
+def dequantize(qt: QTensor, *, dtype=jnp.float32,
+               backend: str | None = None) -> jnp.ndarray:
+    """Decode a :class:`QTensor` back to a dense array of its logical shape."""
+    from repro.kernels import dispatch
+    from repro.kernels import f2p_quant as K  # noqa: F401 (registers backends)
+
+    shape = qt.logical_shape
+    n = shape[-1]
+    b = dispatch.resolve_backend(backend, op="dequantize")
+    if b == dispatch.XLA:
+        out = _dequantize_xla_nd(qt.codes, qt.scales, qt.fmt, qt.block)
+    else:
+        _, fn = dispatch.lookup("dequantize", b)
+        lead = int(qt.codes.size // qt.codes.shape[-1])
+        c2 = qt.codes.reshape(lead, qt.codes.shape[-1])
+        s2 = qt.scales.reshape(lead, qt.scales.shape[-1])
+        pad_r = (-lead) % 8
+        if pad_r:
+            c2 = jnp.pad(c2, ((0, pad_r), (0, 0)))
+            s2 = jnp.pad(s2, ((0, pad_r), (0, 0)), constant_values=1.0)
+        out = fn(c2, s2, qt.fmt, block=qt.block,
+                 out_dtype=jnp.float32)[:lead]
+        out = out.reshape(*shape[:-1], qt.codes.shape[-1])
+    if out.shape[-1] != n:
+        out = jax.lax.slice_in_dim(out, 0, n, axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers (gradient compression / checkpoint / FL paths)
+# ---------------------------------------------------------------------------
+def quantize_tree(tree, fmt: F2PFormat, *, block: int = 128,
+                  min_size: int = 1024, scale_mode: str = "f32",
+                  backend: str | None = None):
+    """Quantize every float leaf with >= min_size elements; pass small leaves
+    through (biases, norms — their bytes don't matter, their precision does)."""
+
+    def q(x):
+        if (hasattr(x, "size") and x.size >= min_size
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            return quantize(x, fmt, block=block, scale_mode=scale_mode,
+                            backend=backend)
+        return x
+
+    return jax.tree.map(q, tree)
+
+
+def dequantize_tree(tree, dtype=jnp.float32, backend: str | None = None):
+    def dq(x):
+        if isinstance(x, QTensor):
+            return dequantize(x, dtype=dtype, backend=backend)
+        return x
+
+    return jax.tree.map(dq, tree, is_leaf=lambda x: isinstance(x, QTensor))

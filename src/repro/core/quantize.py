@@ -1,15 +1,17 @@
-"""Min-max quantization exactly as the paper's Sec. III-B, plus the scaled
-per-block quantizer (QTensor) the framework uses at runtime.
+"""Min-max quantization exactly as the paper's Sec. III-B, plus a float64
+numpy TEST ORACLE for the blockwise quantizer.
 
 Paper definition: given vector V and target format F,
 
     s   = (max V - min V) / (F_max - F_min)
     V^F = s * round_to_nearest_F(V / s)
 
-The runtime QTensor path is the same idea per block (block-scaled F2P), with
-the scale chosen so the block's absmax maps onto the format's max value —
-this is what the Pallas kernels implement on-TPU; here is the exact host
-reference used by tests and benchmarks.
+``block_quantize`` / ``block_dequantize`` below are the exact-f64 host
+oracle for the runtime codec, which lives in :mod:`repro.core.qtensor`
+(QTensor; scale chosen so each block's absmax maps onto the format's max
+value — the thing the Pallas kernels implement on-TPU). The oracle keeps an
+independent f64 code path on purpose: tests compare the f32 kernel math
+against it rather than against itself. Runtime code must NOT call it.
 """
 from __future__ import annotations
 

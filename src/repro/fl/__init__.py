@@ -1,0 +1,12 @@
+"""Federated learning on F2P-quantized client updates (DESIGN.md §7.4).
+
+The paper's FL claim, made runnable: clients send their local model deltas
+as :class:`repro.core.qtensor.QTensor` pytrees (F2P8 codes + per-block
+scales, ~3.9x fewer wire bytes than f32), the server aggregates directly on
+codes+scales, and error feedback keeps convergence at parity with f32
+fed-avg. The third serving scenario after LLM decode and sketch ingest.
+"""
+from repro.fl.client import (ClientConfig, init_client_residuals,
+                             make_client_update)
+from repro.fl.server import aggregate, apply_update, wire_bytes
+from repro.fl.rounds import FedAvgConfig, run_fed_avg, toy_task

@@ -1,0 +1,114 @@
+"""Fed-avg rounds driver: the end-to-end FL simulator.
+
+Wires the toy LM (repro.models) + deterministic synthetic data (repro.data)
+into client/server rounds. Each client sees a disjoint deterministic batch
+stream (shard-by-client of the step-indexed pipeline — non-IID in the same
+benign way multi-host training is), runs ``local_steps`` SGD steps, and
+ships its delta as an (optionally F2P-quantized) update; the server
+aggregates and applies. The client function is jitted ONCE and reused across
+clients and rounds — per-round cost is n_clients forward/backward sweeps
+plus one aggregation.
+
+``run_fed_avg`` is what the convergence test, ``examples/fed_avg.py``, and
+``benchmarks/run.py --only fl`` all drive; the baseline is the same driver
+with ``compress=False`` (f32 deltas on the wire).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import client as C
+from repro.fl import server as S
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgConfig:
+    n_clients: int = 4
+    rounds: int = 5
+    client: C.ClientConfig = C.ClientConfig()
+    server_lr: float = 1.0
+    seed: int = 0
+
+
+def toy_task(*, d_model: int = 64, n_layers: int = 2, vocab: int = 512,
+             seq_len: int = 32, batch: int = 8):
+    """(model_cfg, data_cfg, loss_fn, init_params_fn) for the existing toy
+    LM — the same substrate the train tests converge on."""
+    from repro.data import DataConfig
+    from repro.models import init_params, train_forward
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="fl-toy", n_layers=n_layers, d_model=d_model,
+                      n_heads=4, n_kv_heads=2, d_ff=2 * d_model,
+                      vocab_size=vocab, dtype="float32", remat=False)
+    dcfg = DataConfig(vocab_size=vocab, seq_len=seq_len, global_batch=batch)
+
+    def loss_fn(params, batch_):
+        return train_forward(params, batch_, cfg)[0]
+
+    return cfg, dcfg, loss_fn, init_params
+
+
+def _client_batches(dcfg, fcfg: FedAvgConfig, round_i: int, client_i: int):
+    """Stacked [local_steps] batch pytree for one client round. Each client
+    reads a disjoint slice of the deterministic step-indexed stream."""
+    from repro.data import global_batch
+
+    steps = fcfg.client.local_steps
+    idx0 = (round_i * steps) * fcfg.n_clients + client_i
+    bs = [global_batch(dcfg, idx0 + s * fcfg.n_clients) for s in range(steps)]
+    return {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
+
+
+def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
+    """Run the simulator; returns a history dict:
+
+    ``eval_loss`` per round (held-out deterministic batch), ``client_loss``
+    (mean of final local losses), ``wire_bytes_per_round`` (sum over
+    clients), ``round_seconds`` (wall, post-compile), ``params``."""
+    cfg, dcfg, loss_fn, init_params_fn = task or toy_task()
+    params = init_params_fn(cfg, jax.random.PRNGKey(fcfg.seed))
+    residuals = [C.init_client_residuals(params, fcfg.client)
+                 for _ in range(fcfg.n_clients)]
+
+    client_fn = jax.jit(C.make_client_update(loss_fn, fcfg.client))
+    agg_fn = jax.jit(lambda ups: S.aggregate(ups))
+    apply_fn = jax.jit(
+        lambda p, d: S.apply_update(p, d, server_lr=fcfg.server_lr))
+    eval_fn = jax.jit(loss_fn)
+    from repro.data import global_batch
+
+    eval_batch = {k: jnp.asarray(v)
+                  for k, v in global_batch(dcfg, 1_000_003).items()}
+
+    hist = {"eval_loss": [], "client_loss": [], "wire_bytes_per_round": [],
+            "round_seconds": []}
+    for r in range(fcfg.rounds):
+        t0 = time.perf_counter()
+        updates, round_losses = [], []
+        for c in range(fcfg.n_clients):
+            upd, residuals[c], losses = client_fn(
+                params, residuals[c], _client_batches(dcfg, fcfg, r, c))
+            updates.append(upd)
+            round_losses.append(float(losses[-1]))
+        delta = agg_fn(tuple(updates))
+        params = apply_fn(params, delta)
+        ev = float(eval_fn(params, eval_batch))
+        jax.block_until_ready(params)
+        hist["round_seconds"].append(time.perf_counter() - t0)
+        hist["eval_loss"].append(ev)
+        hist["client_loss"].append(float(np.mean(round_losses)))
+        hist["wire_bytes_per_round"].append(
+            sum(S.wire_bytes(u) for u in updates))
+        if verbose:
+            print(f"round {r}: eval_loss {ev:.4f} "
+                  f"client_loss {hist['client_loss'][-1]:.4f} "
+                  f"wire {hist['wire_bytes_per_round'][-1]/1e6:.2f} MB "
+                  f"({hist['round_seconds'][-1]:.2f}s)", flush=True)
+    hist["params"] = params
+    return hist

@@ -1,0 +1,84 @@
+"""FL server: aggregation directly on codes+scales.
+
+The server never rebuilds a client's unweighted f32 delta as a standalone
+step: the aggregation weight is FOLDED INTO THE SCALES
+(``QTensor.scale_by``) so the per-client multiply happens on the tiny scale
+tensor instead of the full delta, the codes decode through the canonical
+LUT path (an exact upcast — every 8-bit F2P value fits even bf16's 8-bit
+significand, let alone f32), and the weighted contributions accumulate in
+f32. Uncompressed leaves take the plain weighted-sum path. Everything is
+jittable.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+
+_is_q = lambda x: isinstance(x, QTensor)  # noqa: E731
+
+
+def wire_bytes(update) -> int:
+    """Bytes this update costs on the wire: QTensor leaves ship codes+scales;
+    everything else ships raw."""
+    total = 0
+    for leaf in jax.tree.leaves(update, is_leaf=_is_q):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return int(total)
+
+
+def _contribution(leaf, weight):
+    """One client's weighted f32 contribution for one leaf. The weight is
+    folded into the scales (`scale_by`), so the per-client multiply touches
+    only the tiny scale tensor; the canonical dequantize then decodes codes
+    straight through the LUT (an exact upcast — every 8-bit F2P value fits a
+    bf16/f32 significand) and applies the folded scales once."""
+    if isinstance(leaf, QTensor):
+        return leaf.scale_by(weight).dequantize(jnp.float32)
+    return leaf.astype(jnp.float32) * jnp.float32(weight)
+
+
+def aggregate(updates: Sequence, weights: Sequence[float] | None = None):
+    """Weighted mean of client update pytrees -> one f32 delta pytree.
+
+    ``weights`` default to uniform 1/n; they are normalized to sum to 1, so
+    passing per-client example counts gives the standard fed-avg weighting.
+    """
+    n = len(updates)
+    if n == 0:
+        raise ValueError("aggregate() needs at least one client update")
+    if weights is None:
+        w = [1.0 / n] * n
+    else:
+        tot = float(sum(weights))
+        if tot <= 0:
+            raise ValueError(f"non-positive total weight {tot}")
+        w = [float(x) / tot for x in weights]
+
+    flats = [jax.tree.flatten(u, is_leaf=_is_q) for u in updates]
+    td = flats[0][1]
+    for leaves, td_i in flats[1:]:
+        if td_i != td:
+            raise ValueError("client updates have mismatched tree structures")
+
+    out = []
+    for i in range(len(flats[0][0])):
+        acc = _contribution(flats[0][0][i], w[0])
+        for c in range(1, n):
+            acc = acc + _contribution(flats[c][0][i], w[c])
+        out.append(acc)
+    return td.unflatten(out)
+
+
+def apply_update(params, delta, server_lr: float = 1.0):
+    """params + server_lr * delta, preserving each param leaf's dtype."""
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      + jnp.float32(server_lr) * d).astype(p.dtype),
+        params, delta)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.f2p import F2PFormat, Flavor
+from repro.core.qtensor import block_scales
 from repro.kernels import dispatch
 from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
 
@@ -38,11 +39,12 @@ def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128):
     K, N = w.shape
     assert K % block == 0
     wb = w.astype(jnp.float32).reshape(K // block, block, N)
-    absmax = jnp.max(jnp.abs(wb), axis=1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / fmt.max_value),
-                      1.0).astype(jnp.float32)
-    codes = quantize_tile_math((wb / scale).astype(jnp.float32), fmt)
-    return codes.reshape(K, N), scale[:, 0, :]
+    # scales via the one canonical implementation (core.qtensor), which
+    # blocks the LAST axis — feed it the [N, K/block, block] view
+    scale = block_scales(jnp.moveaxis(wb, -1, 0), fmt).T
+    codes = quantize_tile_math((wb / scale[:, None, :]).astype(jnp.float32),
+                               fmt)
+    return codes.reshape(K, N), scale
 
 
 def ref_dequant_matmul(x, codes, scales, fmt: F2PFormat = WEIGHT_FMT,

@@ -29,6 +29,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.f2p import F2PFormat
+from repro.core.qtensor import block_scales
 from repro.kernels import dispatch
 
 __all__ = ["quantize_tile_math", "dequantize_tile_math", "dequantize_lut",
@@ -49,6 +50,11 @@ def _exp2i(n: jnp.ndarray) -> jnp.ndarray:
 def _fmt_consts(fmt: F2PFormat):
     if fmt.h_bits not in (1, 2):
         raise ValueError("kernel supports h_bits in {1,2}")
+    if fmt.n_bits > 16:
+        raise ValueError(
+            f"kernel tile math stores codes as uint16 — n_bits={fmt.n_bits} "
+            "would truncate silently; wider formats (the paper's 19-bit "
+            "point) go through the host encode path (core.f2p)")
     nu, h = fmt.payload_bits, fmt.h_bits
     sgn = fmt.flavor.exponent_sign
     return nu, h, sgn, fmt.vmax, fmt.v_sub, fmt.v_top, fmt.bias
@@ -165,17 +171,10 @@ def dequantize_lut(codes: jnp.ndarray, fmt: F2PFormat,
 
 
 # ---------------------------------------------------------------------------
-# Shared block-scale math (kernel body == XLA backend, bitwise)
+# Shared block-scale math: ONE implementation, owned by core.qtensor
+# (kernel body == XLA backend == every QTensor producer, bitwise)
 # ---------------------------------------------------------------------------
-def _block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str):
-    """Per-block scales from [..., nblocks, block] f32 data."""
-    absmax = jnp.max(jnp.abs(xb), axis=-1)
-    # multiply by reciprocal constant: XLA const-folds `x / const` into this
-    # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
-    scale = absmax * jnp.float32(1.0 / fmt.max_value)
-    if scale_mode == "pow2":
-        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
-    return jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
+_block_scales = block_scales
 
 
 # ---------------------------------------------------------------------------

@@ -1,64 +1,29 @@
-"""Public jit'd F2P tensor ops used across the framework.
+"""Public jit'd F2P tensor ops — thin compatibility layer over the canonical
+QTensor codec in :mod:`repro.core.qtensor`.
 
 `f2p_quantize` / `f2p_dequantize` accept arbitrary-rank arrays (the last axis
-is the blocked one), pad to tile boundaries, and route through the backend
+is the blocked one), pad to block boundaries, and route through the backend
 dispatch registry (`repro.kernels.dispatch`): compiled Pallas on TPU,
-fused-XLA tile math on CPU and inside jit traces (where XLA fuses it into the
-surrounding HLO), interpret-mode Pallas on request. Selection is one explicit,
-trace-safe point — no tracer probing, no per-call-site `interpret=` defaults.
+fused-XLA tile math on CPU and inside jit traces, interpret-mode Pallas on
+request. The QTensor class itself, the tree helpers, and the block-scale
+math all live in ``core/qtensor.py`` now — this module only keeps the
+historical entry-point names (including the legacy ``use_pallas`` switch)
+stable for callers and tests.
 """
 from __future__ import annotations
 
-import jax
+import math
+
 import jax.numpy as jnp
 
 from repro.core.f2p import F2PFormat
+from repro.core.qtensor import (QTensor, dequantize_tree, quantize_tree)
+from repro.core import qtensor as QT
 from repro.kernels import dispatch
 from repro.kernels import f2p_quant as K  # noqa: F401  (registers backends)
 
 __all__ = ["f2p_quantize", "f2p_dequantize", "QTensor", "quantize_tree",
            "dequantize_tree"]
-
-
-@jax.tree_util.register_pytree_node_class
-class QTensor:
-    """An F2P block-quantized tensor: codes + per-block scales + static meta."""
-
-    def __init__(self, codes, scales, fmt: F2PFormat, block: int, shape):
-        self.codes, self.scales = codes, scales
-        self.fmt, self.block, self.shape = fmt, block, tuple(shape)
-
-    def dequantize(self, dtype=jnp.float32, backend: str | None = None):
-        return f2p_dequantize(self.codes, self.scales, self.fmt,
-                              block=self.block, out_dtype=dtype,
-                              out_shape=self.shape, backend=backend)
-
-    @property
-    def nbytes(self):
-        return self.codes.size * self.codes.dtype.itemsize + \
-            self.scales.size * self.scales.dtype.itemsize
-
-    def tree_flatten(self):
-        return (self.codes, self.scales), (self.fmt, self.block, self.shape)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
-
-    def __repr__(self):
-        return f"QTensor({self.shape}, fmt={self.fmt}, block={self.block})"
-
-
-def _to_2d(x, block):
-    """Collapse to (rows, cols) with cols % block == 0, padding rows to 8."""
-    n = x.shape[-1]
-    lead = int(x.size // n) if x.ndim > 1 else 1
-    x2 = x.reshape(lead, n)
-    pad_r = (-lead) % 8
-    pad_c = (-n) % block
-    if pad_r or pad_c:
-        x2 = jnp.pad(x2, ((0, pad_r), (0, pad_c)))
-    return x2, lead, n
 
 
 def _pick_backend(backend: str | None, use_pallas: bool | None) -> str | None:
@@ -74,43 +39,28 @@ def f2p_quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
                  scale_mode: str = "f32", backend: str | None = None,
                  use_pallas: bool | None = None) -> QTensor:
     """Block-quantize any-rank array along its last axis into a QTensor."""
-    orig_shape = x.shape
-    x2, _, _ = _to_2d(x, block)
-    _, fn = dispatch.lookup("quantize", _pick_backend(backend, use_pallas))
-    codes, scales = fn(x2, fmt, block=block, scale_mode=scale_mode)
-    return QTensor(codes, scales, fmt, block, orig_shape)
+    return QT.quantize(x, fmt, block=block, scale_mode=scale_mode,
+                       backend=_pick_backend(backend, use_pallas))
 
 
 def f2p_dequantize(codes, scales, fmt: F2PFormat, *, block: int = 128,
                    out_dtype=jnp.float32, out_shape=None,
                    backend: str | None = None,
                    use_pallas: bool | None = None):
-    _, fn = dispatch.lookup("dequantize", _pick_backend(backend, use_pallas))
-    out = fn(codes, scales, fmt, block=block, out_dtype=out_dtype)
-    if out_shape is not None:
-        lead = 1
-        for d in out_shape[:-1]:
-            lead *= d
-        out = out[:lead, :out_shape[-1]].reshape(out_shape)
-    return out
+    """Decode raw codes+scales leaves. ``out_shape`` is the logical shape
+    (defaults to the codes shape — valid when the last dim needed no pad).
 
-
-# ---- pytree helpers (gradient compression / checkpoint paths) -------------
-def quantize_tree(tree, fmt: F2PFormat, *, block: int = 128,
-                  min_size: int = 1024, scale_mode: str = "f32"):
-    """Quantize every array leaf with >= min_size elements; pass small leaves
-    through (biases, norms — their bytes don't matter, their precision does)."""
-
-    def q(x):
-        if x.size >= min_size and jnp.issubdtype(x.dtype, jnp.floating):
-            return f2p_quantize(x, fmt, block=block, scale_mode=scale_mode)
-        return x
-
-    return jax.tree.map(q, tree)
-
-
-def dequantize_tree(tree, dtype=jnp.float32):
-    def dq(x):
-        return x.dequantize(dtype) if isinstance(x, QTensor) else x
-
-    return jax.tree.map(dq, tree, is_leaf=lambda x: isinstance(x, QTensor))
+    Historical contract kept: ``codes`` may arrive in the kernels' collapsed
+    2D layout (leading dims merged, rows possibly padded to the tile
+    sublane); it is sliced and reshaped back to ``out_shape``'s leading dims
+    before decoding."""
+    shape = tuple(out_shape) if out_shape is not None else tuple(codes.shape)
+    if tuple(codes.shape[:-1]) != shape[:-1]:
+        lead = math.prod(shape[:-1]) if shape[:-1] else 1
+        codes = codes.reshape(-1, codes.shape[-1])[:lead] \
+            .reshape(*shape[:-1], codes.shape[-1])
+        scales = scales.reshape(-1, scales.shape[-1])[:lead] \
+            .reshape(*shape[:-1], scales.shape[-1])
+    qt = QTensor.from_parts(codes, scales, fmt, block, shape)
+    return QT.dequantize(qt, dtype=out_dtype,
+                         backend=_pick_backend(backend, use_pallas))

@@ -17,14 +17,13 @@ from repro.models.sharding import make_rules, param_specs
 from repro.optim import AdamWConfig, CompressionConfig
 from repro.train import init_train_state
 
-# cache leaf name -> logical axes (leading scan-group dim added automatically)
+# cache leaf name -> logical axes (leading scan-group dim added automatically).
+# The quantized KV cache stores QTensor pytrees under "k"/"v": both leaves
+# (codes [B,S,K,hd] and scales [B,S,K,1]) have the same rank and leading
+# axes, so one entry per cache key covers dense and quantized layouts alike.
 _CACHE_AXES = {
     "k": ("batch", "kv_seq", "kv", None),
     "v": ("batch", "kv_seq", "kv", None),
-    "k_codes": ("batch", "kv_seq", "kv", None),
-    "v_codes": ("batch", "kv_seq", "kv", None),
-    "k_scale": ("batch", "kv_seq", "kv", None),
-    "v_scale": ("batch", "kv_seq", "kv", None),
     "conv": ("batch", None, "inner"),
     "ssm": ("batch", "inner", None),
     "C": ("batch", "heads_nodata", None, None),
@@ -90,7 +89,10 @@ def _spec_tree_to_sds(shape_tree, spec_tree, mesh):
 
 def cache_specs(cache_tree, rules):
     def leaf_spec(path, leaf):
-        names = [p.key for p in path if hasattr(p, "key")]
+        # last STRING key wins: QTensor children appear as FlattenedIndexKey
+        # entries (integer .key) below the "k"/"v" dict key that names them
+        names = [p.key for p in path
+                 if hasattr(p, "key") and isinstance(p.key, str)]
         name = names[-1]
         axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
         axes = ("layers",) + tuple(axes)  # leading scan-group dim
@@ -120,9 +122,16 @@ def train_state_sds(cfg, ocfg, ccfg, mesh, rules):
     pspecs = param_specs(st["params"], rules)
 
     def follow(specs, tree):
-        return jax.tree.map(
-            lambda sp, leaf: sp if leaf.ndim == len(sp) else P(),
-            specs, tree)
+        """Specs for a tree that mirrors params but may hold ``None``
+        sentinels (small-leaf residuals): keep None where the tree has None
+        so the spec tree's structure matches the value tree's."""
+        is_none = lambda x: x is None  # noqa: E731
+        leaves, td = jax.tree.flatten(tree, is_leaf=is_none)
+        sleaves = jax.tree.leaves(specs)
+        out = [None if leaf is None
+               else (sp if getattr(leaf, "ndim", -1) == len(sp) else P())
+               for sp, leaf in zip(sleaves, leaves)]
+        return jax.tree.unflatten(td, out)
 
     specs = {"params": pspecs,
              "opt": {"mu": pspecs, "nu": pspecs,

@@ -2,8 +2,13 @@
 (bf16 or F2P8-quantized), RoPE, cross-attention.
 
 Shapes: x [B, S, D]; q [B, S, H, hd]; k/v [B, S, K, hd] with H % K == 0.
-Cache: dict with "k"/"v" [B, K, Smax, hd] (bf16) or F2P8 codes+scales
-("k_codes" [B, K, Smax, hd] uint8, "k_scale" [B, K, Smax, 1] f32).
+Cache: dict with "k"/"v" leaves — either plain [B, Smax, K, hd] arrays (bf16
+path) or :class:`repro.core.qtensor.QTensor` values (F2P8 path: uint8 codes
+[B, Smax, K, hd] + per-(position, head) f32 scales [B, Smax, K, 1], i.e. the
+canonical last-axis-blocked QTensor layout with block = head_dim). QTensor is
+a registered pytree, so the quantized cache jits/scans/shards exactly like
+the dense one; writes go through ``QTensor.dynamic_update`` which updates
+codes and scales coherently.
 """
 from __future__ import annotations
 
@@ -13,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.models.common import apply_rope, truncnorm_init
 from repro.core.f2p import F2PFormat, Flavor
-from repro.kernels.f2p_quant import quantize_tile_math, dequantize_tile_math
+from repro.core import qtensor as QT
+from repro.core.qtensor import QTensor
 
 KV_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 
@@ -29,17 +35,15 @@ def init_attention(key, cfg, cross: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# KV quantization (per-(position, head) scale over the head_dim axis)
+# KV quantization (per-(position, head) scale over the head_dim axis ==
+# canonical QTensor blocking with block = head_dim)
 # ---------------------------------------------------------------------------
-def quantize_kv(k):
-    absmax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / KV_FMT.max_value), 1.0)
-    codes = quantize_tile_math((k / scale).astype(jnp.float32), KV_FMT)
-    return codes, scale.astype(jnp.float32)
+def quantize_kv(k) -> QTensor:
+    return QT.quantize(k, KV_FMT, block=k.shape[-1])
 
 
-def dequantize_kv(codes, scale, dtype):
-    return (dequantize_tile_math(codes, KV_FMT, jnp.float32) * scale).astype(dtype)
+def dequantize_kv(qt: QTensor, dtype):
+    return qt.dequantize(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -270,44 +274,36 @@ def _attend(q, k, v, cfg, *, causal, kv_len=None, q_offset=0):
 def init_cache(cfg, batch, max_seq, quantized: bool, dtype):
     K, hd = cfg.n_kv_heads, cfg.head_dim
     if quantized:
-        return {"k_codes": jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
-                "k_scale": jnp.ones((batch, max_seq, K, 1), jnp.float32),
-                "v_codes": jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
-                "v_scale": jnp.ones((batch, max_seq, K, 1), jnp.float32)}
+        def empty():
+            # zero codes decode to exact 0.0; unit scales keep them there
+            return QTensor.from_parts(
+                jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
+                jnp.ones((batch, max_seq, K, 1), jnp.float32),
+                KV_FMT, hd, (batch, max_seq, K, hd))
+
+        return {"k": empty(), "v": empty()}
     return {"k": jnp.zeros((batch, max_seq, K, hd), dtype),
             "v": jnp.zeros((batch, max_seq, K, hd), dtype)}
 
 
-def _cache_write_prefill(cache, k, v):
-    S = k.shape[1]
-    if "k_codes" in cache:
-        kc, ks = quantize_kv(k)
-        vc, vs = quantize_kv(v)
-        return {"k_codes": jax.lax.dynamic_update_slice_in_dim(cache["k_codes"], kc, 0, 1),
-                "k_scale": jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, 0, 1),
-                "v_codes": jax.lax.dynamic_update_slice_in_dim(cache["v_codes"], vc, 0, 1),
-                "v_scale": jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, 0, 1)}
-    return {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)}
-
-
-def _cache_write_decode(cache, k, v, idx):
-    if "k_codes" in cache:
-        kc, ks = quantize_kv(k)
-        vc, vs = quantize_kv(v)
-        upd = jax.lax.dynamic_update_slice_in_dim
-        return {"k_codes": upd(cache["k_codes"], kc, idx, 1),
-                "k_scale": upd(cache["k_scale"], ks, idx, 1),
-                "v_codes": upd(cache["v_codes"], vc, idx, 1),
-                "v_scale": upd(cache["v_scale"], vs, idx, 1)}
+def _cache_write(cache, k, v, idx):
+    if isinstance(cache["k"], QTensor):
+        return {"k": cache["k"].dynamic_update(quantize_kv(k), idx, axis=1),
+                "v": cache["v"].dynamic_update(quantize_kv(v), idx, axis=1)}
     upd = jax.lax.dynamic_update_slice_in_dim
     return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
 
 
+def _cache_write_prefill(cache, k, v):
+    return _cache_write(cache, k, v, 0)
+
+
+def _cache_write_decode(cache, k, v, idx):
+    return _cache_write(cache, k, v, idx)
+
+
 def _cache_read(cache, cfg):
-    if "k_codes" in cache:
+    if isinstance(cache["k"], QTensor):
         dt = cfg.jnp_dtype
-        k = dequantize_kv(cache["k_codes"], cache["k_scale"], dt)
-        v = dequantize_kv(cache["v_codes"], cache["v_scale"], dt)
-        return k, v
+        return dequantize_kv(cache["k"], dt), dequantize_kv(cache["v"], dt)
     return cache["k"], cache["v"]

@@ -1,11 +1,13 @@
 """F2P gradient compression with error feedback — the paper's format as a
-distributed-training optimization.
+distributed-training optimization, built on the canonical
+:class:`repro.core.qtensor.QTensor` codec (DESIGN.md §7).
 
 Data-parallel gradient exchange is decomposed as
 
-    local grad -> (+ residual) -> F2P8 block-quantize -> psum of DEQUANTIZED
-    shards is replaced by: reduce_scatter(bf16) -> quantize -> all_gather
-    (codes+scales, ~4x fewer bytes than f32 on the gather leg) -> dequantize
+    local grad -> (+ residual) -> QTensor(F2P8 blockwise) -> psum of
+    DEQUANTIZED shards is replaced by: reduce_scatter (input dtype) ->
+    quantize shard -> all_gather the QTensor's code/scale LEAVES
+    (~4x fewer bytes than f32 on the gather leg) -> one dequantize
 
 and the quantization error (g - dequant(quant(g))) is carried into the next
 step's gradient (error feedback; Karimireddy et al. 2019) so compression
@@ -13,11 +15,20 @@ noise becomes a moving average instead of a bias — SGD/Adam convergence is
 preserved.
 
 Two integration points:
-  * `compress_decompress(g)`: inside-jit round-trip (embedded tile math) used
-    with plain psum — models the numerics exactly on any runner, and is what
-    the quickstart example validates convergence with.
+  * `compress_decompress(g)`: inside-jit round-trip (one `qtensor.quantize`/
+    `dequantize` pair, which the trace-time dispatch resolves to fused-XLA
+    tile math) used with plain psum — models the numerics exactly on any
+    runner, and is what the quickstart example validates convergence with.
   * `compressed_psum(g, axis)`: shard_map building block doing the real
-    reduce_scatter/all_gather schedule on a named axis.
+    reduce_scatter/all_gather schedule on a named axis. The mean's 1/W is
+    folded into the QTensor scales before the gather, so the dequantize side
+    of the wire does no extra multiply.
+
+Residual bookkeeping: leaves below ``min_size`` are never compressed and
+carry an explicit ``None`` residual sentinel (NOT a ()-shaped zero — a
+scalar residual would silently broadcast into the gradient if ``min_size``
+were later lowered). `compress_decompress` asserts residual/gradient shape
+agreement on every compressed leaf.
 
 Format default: F2P8 SR signed (wide mantissa near zero — gradients are
 short-tailed; paper Table VI shows SR wins on such tensors).
@@ -30,7 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.f2p import F2PFormat, Flavor
-from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
+from repro.core import qtensor as QT
+from repro.core.qtensor import QTensor
 
 GRAD_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 
@@ -45,26 +57,11 @@ class CompressionConfig:
 
 
 def _roundtrip(x, fmt: F2PFormat, block: int):
-    """quantize+dequantize x (any shape; last axis blocked, padded).
-
-    Only the LAST axis is reshaped: merging sharded leading dims forces
-    GSPMD to all-gather the whole (f32!) tensor just to reflow it — the
-    blocked view (..., n/block, block) keeps every leading-dim sharding."""
-    shape = x.shape
-    n = shape[-1]
-    x32 = x.astype(jnp.float32)
-    pad = (-n) % block
-    if pad:
-        x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
-    xb = x32.reshape(*shape[:-1], -1, block)
-    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / fmt.max_value), 1.0)
-    codes = quantize_tile_math((xb / scale).astype(jnp.float32), fmt)
-    vals = dequantize_tile_math(codes, fmt, jnp.float32)
-    out = (vals * scale).reshape(*shape[:-1], n + pad)
-    if pad:
-        out = jax.lax.slice_in_dim(out, 0, n, axis=-1)
-    return out
+    """quantize+dequantize x through the canonical QTensor codec (any shape;
+    last axis blocked + padded, leading-dim shardings preserved — see
+    core/qtensor.py on why leading dims are never merged)."""
+    qt = QT.quantize(x.astype(jnp.float32), fmt, block=block)
+    return qt.dequantize(jnp.float32)
 
 
 def compress_decompress(grads, residuals, ccfg: CompressionConfig):
@@ -72,28 +69,45 @@ def compress_decompress(grads, residuals, ccfg: CompressionConfig):
 
     Returns (compressed_grads, new_residuals). With error feedback the
     residual r accumulates what quantization lost: send q(g + r), keep
-    r' = (g + r) - q(g + r)."""
+    r' = (g + r) - q(g + r). Small leaves carry a ``None`` residual and pass
+    through untouched."""
     if not ccfg.enabled:
         return grads, residuals
 
     def one(g, r):
-        if g.size < ccfg.min_size:
+        if g.size < ccfg.min_size or r is None:
+            if r is not None and r.shape != g.shape:
+                raise ValueError(
+                    f"residual shape {r.shape} disagrees with uncompressed "
+                    f"gradient {g.shape} — stale residual tree?")
             return g, r
+        if r.shape != g.shape:
+            raise ValueError(
+                f"residual shape {r.shape} != gradient shape {g.shape}; "
+                "residuals must be re-initialized when min_size changes")
         gin = g.astype(jnp.float32) + (r if ccfg.error_feedback else 0.0)
         q = _roundtrip(gin, ccfg.fmt, ccfg.block)
         new_r = (gin - q) if ccfg.error_feedback else r
         return q.astype(g.dtype), new_r
 
+    is_none = lambda x: x is None  # noqa: E731
     flat_g, td = jax.tree.flatten(grads)
-    flat_r = td.flatten_up_to(residuals)
+    flat_r, rtd = jax.tree.flatten(residuals, is_leaf=is_none)
+    if len(flat_g) != len(flat_r):
+        raise ValueError(
+            f"gradient tree has {len(flat_g)} leaves but residual tree has "
+            f"{len(flat_r)} — structures must match leaf-for-leaf")
     out = [one(g, r) for g, r in zip(flat_g, flat_r)]
-    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+    return (td.unflatten([o[0] for o in out]),
+            jax.tree.unflatten(rtd, [o[1] for o in out]))
 
 
 def init_residuals(params, ccfg: CompressionConfig):
+    """Zero residuals for compressible leaves; explicit ``None`` sentinel for
+    small leaves (never a broadcastable scalar)."""
     return jax.tree.map(
         lambda p: (jnp.zeros(p.shape, jnp.float32)
-                   if p.size >= ccfg.min_size else jnp.zeros((), jnp.float32)),
+                   if p.size >= ccfg.min_size else None),
         params)
 
 
@@ -101,30 +115,31 @@ def init_residuals(params, ccfg: CompressionConfig):
 # shard_map collective: the actual wire format
 # ---------------------------------------------------------------------------
 def compressed_psum(g: jnp.ndarray, axis_name: str, ccfg: CompressionConfig):
-    """Mean-reduce g over `axis_name` exchanging F2P codes on the gather leg.
+    """Mean-reduce g over `axis_name` exchanging QTensor leaves on the gather
+    leg.
 
     reduce_scatter in input dtype (the summation must stay high precision),
-    then each member quantizes its shard and all_gathers codes + scales:
+    then each member quantizes its SUM shard into a QTensor and folds the
+    mean's 1/W into the scales — the blockwise scaling is exactly
+    scale-equivariant, so quantize(sum)/W and quantize(sum/W) agree while
+    the gather-side dequantize needs no extra multiply. Both leaves (codes + scales) ride
+    all_gather and reassemble zero-copy via ``QTensor.from_parts``:
     wire bytes = N/W * 4 (scatter, f32) + N * (1 + 4/block) (gather codes)
     vs 2 * N * 4 for a ring all-reduce in f32."""
     w = jax.lax.psum(1, axis_name)
     n = g.shape[0]
     pad = (-n) % w
     gp = jnp.pad(g.reshape(n, -1), ((0, pad), (0, 0))) if pad else g.reshape(n, -1)
-    shard = jax.lax.psum_scatter(gp, axis_name, scatter_dimension=0,
-                                 tiled=True) / w
-    # quantize the local shard
-    cols = shard.shape[-1]
-    bpad = (-cols) % ccfg.block
-    sp = jnp.pad(shard, ((0, 0), (0, bpad))) if bpad else shard
-    xb = sp.reshape(sp.shape[0], -1, ccfg.block).astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0,
-                      absmax * jnp.float32(1.0 / ccfg.fmt.max_value), 1.0)
-    codes = quantize_tile_math((xb / scale).astype(jnp.float32), ccfg.fmt)
-    # exchange compressed
-    codes_all = jax.lax.all_gather(codes, axis_name, axis=0, tiled=True)
-    scale_all = jax.lax.all_gather(scale, axis_name, axis=0, tiled=True)
-    vals = dequantize_tile_math(codes_all, ccfg.fmt, jnp.float32) * scale_all
-    out = vals.reshape(vals.shape[0], -1)[:, :cols]
+    shard_sum = jax.lax.psum_scatter(gp, axis_name, scatter_dimension=0,
+                                     tiled=True)
+    cols = shard_sum.shape[-1]
+    # quantize the local SUM shard, fold the mean into the scales
+    qt = QT.quantize(shard_sum.astype(jnp.float32), ccfg.fmt,
+                     block=ccfg.block).scale_by(1.0 / w)
+    # exchange compressed: the QTensor's leaves go on the wire directly
+    codes_all = jax.lax.all_gather(qt.codes, axis_name, axis=0, tiled=True)
+    scale_all = jax.lax.all_gather(qt.scales, axis_name, axis=0, tiled=True)
+    full = QTensor.from_parts(codes_all, scale_all, ccfg.fmt, ccfg.block,
+                              (codes_all.shape[0], cols))
+    out = full.dequantize(jnp.float32)
     return out[:n].reshape(g.shape).astype(g.dtype)

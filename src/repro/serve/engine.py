@@ -24,6 +24,7 @@ class ServeConfig:
     max_seq: int
     quantized_kv: bool = False
     temperature: float = 0.0   # 0 = greedy
+    seed: int = 0              # PRNG stream for temperature sampling
 
 
 def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
@@ -39,7 +40,10 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
     def serve_step(params, caches, token, pos):
         logits, caches = decode_step(params, token, pos, caches, cfg)
         if scfg.temperature > 0:
-            key = jax.random.fold_in(jax.random.PRNGKey(0), pos)
+            # seed threaded from ServeConfig: distinct engines/configs get
+            # distinct sample streams (the old hardcoded PRNGKey(0) made
+            # temperature sampling identical across every call)
+            key = jax.random.fold_in(jax.random.PRNGKey(scfg.seed), pos)
             nxt = jax.random.categorical(key, logits / scfg.temperature, -1)
         else:
             nxt = jnp.argmax(logits, axis=-1)
@@ -58,6 +62,10 @@ class Engine:
         self._step = jax.jit(make_serve_step(cfg, scfg))
 
     def generate(self, prompts: np.ndarray, max_new: int, eos: int = -1):
+        """Decode loop with a device-side token buffer: tokens stay on
+        device across steps and sync to host ONCE at the end. Only EOS
+        tracking (eos >= 0) pays a per-step host sync, and then only for a
+        scalar all-done flag, never the token history."""
         B, S = prompts.shape
         assert B == self.scfg.batch
         caches = init_caches(self.cfg, B, self.scfg.max_seq,
@@ -65,14 +73,17 @@ class Engine:
         batch = {"tokens": jnp.asarray(prompts)}
         logits, caches = self._prefill(self.params, batch, caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out = [np.asarray(tok)]
+        out = [tok]
+        done = (tok[:, 0] == eos) if eos >= 0 else None
         for i in range(max_new - 1):
             tok, caches = self._step(self.params, caches, tok,
                                      jnp.int32(S + i))
-            out.append(np.asarray(tok))
-            if eos >= 0 and bool((np.concatenate(out, 1) == eos).any(1).all()):
-                break
-        return np.concatenate(out, axis=1)
+            out.append(tok)
+            if eos >= 0:
+                done = done | (tok[:, 0] == eos)
+                if bool(done.all()):  # scalar sync, EOS mode only
+                    break
+        return np.asarray(jnp.concatenate(out, axis=1))
 
 
 class SketchIngestEngine:

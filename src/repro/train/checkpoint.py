@@ -1,16 +1,25 @@
 """Fault-tolerant checkpointing: atomic writes, K-last retention, optional
-F2P16 payload compression, mesh-agnostic restore.
+F2P16 payload compression via the canonical QTensor codec, mesh-agnostic
+restore.
 
 Layout: <dir>/step_<n>/ with one msgpack index + raw .npy-style buffers.
 Writes go to a tmp dir then os.replace() — a crash mid-write never corrupts
 the latest checkpoint (restore scans for the newest *complete* step).
 
 F2P16 compression (paper-powered): float leaves above `min_size` are stored
-as F2P16-SR codes + per-block f32 scales (~2x smaller than f32, ~same as
-bf16 but with 2.4x lower MSE on short-tailed weight tensors — Table VI).
-Restore dequantizes transparently. Error feedback in the optimizer makes
-training robust to the round-trip (tests/test_train.py exercises
-save->restore->train-on parity).
+as the two leaves of a :class:`repro.core.qtensor.QTensor` — uint16 codes +
+per-block f32 scales (~2x smaller than f32, ~same as bf16 but with 2.4x
+lower MSE on short-tailed weight tensors — Table VI) — plus the format
+descriptor in the index. Restore reassembles zero-copy via
+``QTensor.from_parts`` and dequantizes transparently; pass ``lazy=True`` to
+get the QTensor itself (decode deferred to first use — serving paths that
+feed codes straight to the dequant-matmul kernel never materialize f32).
+Trees that already CONTAIN QTensor leaves (quantized KV caches, FL update
+logs) need no codec at all: QTensor is a pytree, so its codes/scales leaves
+serialize raw and restore bit-exactly.
+
+Error feedback in the optimizer makes training robust to the compression
+round-trip (tests/test_train.py exercises save->restore->train-on parity).
 """
 from __future__ import annotations
 
@@ -20,12 +29,24 @@ import shutil
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.f2p import F2PFormat, Flavor
-from repro.core.quantize import block_quantize, block_dequantize
+from repro.core import qtensor as QT
+from repro.core.qtensor import QTensor
 
 CKPT_FMT = F2PFormat(n_bits=16, h_bits=2, flavor=Flavor.SR, signed=True)
+
+
+def _fmt_meta(fmt: F2PFormat) -> dict:
+    return {"n_bits": fmt.n_bits, "h_bits": fmt.h_bits,
+            "flavor": fmt.flavor.value, "signed": fmt.signed}
+
+
+def _fmt_from_meta(m: dict) -> F2PFormat:
+    return F2PFormat(n_bits=m["n_bits"], h_bits=m["h_bits"],
+                     flavor=Flavor(m["flavor"]), signed=m["signed"])
 
 
 def _flatten(tree):
@@ -33,10 +54,30 @@ def _flatten(tree):
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
 
 
+def _codec_shrinks(arr: np.ndarray, block: int) -> bool:
+    """Would F2P16 codes+scales actually be smaller than the raw bytes?
+    Narrow-last-dim leaves (e.g. [N, 1]: 2B code + 4B scale per element vs
+    4B raw) expand under the codec and must stay raw."""
+    blk = min(block, arr.shape[-1])
+    npad = -(-arr.shape[-1] // blk) * blk
+    lead = arr.size // arr.shape[-1]
+    compressed = lead * (npad * np.dtype(CKPT_FMT.code_dtype).itemsize
+                         + (npad // blk) * 4)
+    return compressed < arr.nbytes
+
+
 def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
          keep: int = 3, block: int = 128, min_size: int = 65536) -> str:
     """Atomically write `tree` as step_<step>; prune to `keep` newest."""
     flat, _ = _flatten(tree)
+    # leaves belonging to a QTensor are ALREADY a compressed wire format —
+    # re-compressing the f32 scales leaf would be lossy-on-lossy and break
+    # the bit-exact round-trip for quantized caches / lazy-restored trees
+    qt_children = set()
+    for node in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(node, QTensor):
+            qt_children.add(id(node.codes))
+            qt_children.add(id(node.scales))
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
     if os.path.exists(tmp):
@@ -49,12 +90,19 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
             arr = np.asarray(leaf)
             entry = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
             if (compress and arr.dtype.kind == "f" and arr.size >= min_size
-                    and arr.shape and arr.shape[-1] % block == 0):
-                bq = block_quantize(arr.astype(np.float64), CKPT_FMT, block)
-                payload = bq.codes.astype(np.uint16).tobytes()
-                scales = bq.scales.astype(np.float32).tobytes()
-                entry.update(codec="f2p16", block=block,
-                             scale_shape=list(bq.scales.shape))
+                    and arr.shape and id(leaf) not in qt_children
+                    and _codec_shrinks(arr, block)):
+                # cap the block at the leaf's last dim: a 128-block on a
+                # narrow leaf would PAD codes up to 128 and balloon the file
+                leaf_block = min(block, arr.shape[-1])
+                qt = QT.quantize(jnp.asarray(arr, jnp.float32), CKPT_FMT,
+                                 block=leaf_block, backend="xla")
+                payload = np.asarray(qt.codes).tobytes()
+                scales = np.asarray(qt.scales).tobytes()
+                entry.update(codec="qtensor", block=leaf_block,
+                             fmt=_fmt_meta(CKPT_FMT),
+                             codes_shape=list(qt.codes.shape),
+                             scale_shape=list(qt.scales.shape))
                 entry["offset"], entry["nbytes"] = f.tell(), len(payload)
                 f.write(payload)
                 entry["scale_offset"], entry["scale_nbytes"] = f.tell(), len(scales)
@@ -98,12 +146,27 @@ def latest_step(ckpt_dir: str):
     return max(steps) if steps else None
 
 
+def _read_qtensor(e: dict, data: np.memmap) -> QTensor:
+    """Reassemble a compressed leaf's QTensor (zero-copy from the mmap view
+    into device-placeable numpy; decode deferred to the caller)."""
+    fmt = _fmt_from_meta(e["fmt"]) if "fmt" in e else CKPT_FMT
+    code_np = np.dtype(fmt.code_dtype)
+    raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
+    codes = np.frombuffer(raw, code_np).reshape(
+        e.get("codes_shape", e["shape"]))
+    sraw = bytes(data[e["scale_offset"]:e["scale_offset"] + e["scale_nbytes"]])
+    scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
+    return QTensor.from_parts(jnp.asarray(codes), jnp.asarray(scales), fmt,
+                              e["block"], e["shape"])
+
+
 def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
-            shardings: Any = None):
+            shardings: Any = None, *, lazy: bool = False):
     """Restore into the structure of `tree_like`. Mesh-agnostic: leaves are
     read on host and (optionally) placed onto `shardings` (a matching pytree
     of NamedSharding), so restarts may use a different mesh shape (elastic
-    rescale)."""
+    rescale). With ``lazy=True``, compressed leaves come back as QTensor
+    values instead of being dequantized eagerly."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -116,18 +179,13 @@ def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
 
     def read(name, like):
         e = index[name]
+        if e["codec"] in ("qtensor", "f2p16"):  # f2p16: pre-QTensor name
+            qt = _read_qtensor(e, data)
+            if lazy:
+                return qt
+            return np.asarray(qt.dequantize(backend="xla")).astype(e["dtype"])
         raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
-        if e["codec"] == "f2p16":
-            codes = np.frombuffer(raw, np.uint16).reshape(e["shape"])
-            sraw = bytes(data[e["scale_offset"]:e["scale_offset"] + e["scale_nbytes"]])
-            scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
-            from repro.core.quantize import BlockQuantized
-            arr = block_dequantize(BlockQuantized(
-                codes=codes.astype(np.int64), scales=scales,
-                block=e["block"], fmt=CKPT_FMT)).astype(e["dtype"])
-        else:
-            arr = np.frombuffer(raw, e["dtype"]).reshape(e["shape"]).copy()
-        return arr
+        return np.frombuffer(raw, e["dtype"]).reshape(e["shape"]).copy()
 
     flat_out = {}
     for name, like in flat_like.items():
@@ -135,5 +193,9 @@ def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
     leaves = [flat_out[k] for k in flat_like]
     out = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
-        out = jax.tree.map(lambda a, s: jax.device_put(a, s), out, shardings)
+        # a QTensor restored leaf (lazy=True, or one embedded in the tree)
+        # is placed as a whole against ONE sharding entry — device_put
+        # handles the pytree; descending into it would mismatch structures
+        out = jax.tree.map(lambda a, s: jax.device_put(a, s), out, shardings,
+                           is_leaf=lambda x: isinstance(x, QTensor))
     return out, step
