@@ -294,6 +294,87 @@ def bench_fl(quick=False, warmup=1, reps=3):
     return out
 
 
+def bench_autotune(quick=False, warmup=1, reps=3):
+    """Autotune subsystem: streaming-calibration throughput, policy solve
+    latency, and the calibrated-policy vs best-hardcoded-format MSE ratio
+    (the quality headline — recorded in the trajectory, not gated: it is a
+    ratio, not a timing)."""
+    import jax.numpy as jnp
+
+    from repro.autotune import (LeafSpec, NORM_SPEC, candidate_formats,
+                                empty_state, leaf_summary, solve, update)
+    from repro.core.formats import named_format
+
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # 1) calibration update: one fixed-shape histogram fold, jitted
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    state = empty_state(NORM_SPEC)
+    us, _ = timeit(lambda: update(state, x, NORM_SPEC, 128),
+                   warmup=warmup, reps=reps)
+    eps = x.size / (us / 1e6)
+    print(f"autotune_calib_256x1024,{us:.0f},elems_per_s={eps/1e6:.1f}M")
+    out["calib_us"] = us
+
+    # 2) policy solve over a realistic leaf population
+    n_leaves = 8 if quick else 24
+    block = 128
+    leaves = []
+    for i in range(n_leaves):
+        sigma = 0.5 + 2.5 * (i / max(n_leaves - 1, 1))
+        xl = rng.lognormal(-4.0, sigma, 8192).astype(np.float32)
+        xl *= rng.choice([-1.0, 1.0], size=xl.size).astype(np.float32)
+        dist, srms = leaf_summary(xl.reshape(-1, 128), block=block)
+        leaves.append(LeafSpec(path=f"leaf{i}", size=xl.size, last_dim=128,
+                               dist=dist, scale_rms=srms))
+    cands = candidate_formats(n_bits=(6, 8, 10, 12))
+    us, policy = timeit(lambda: solve(leaves, cands, 8.0 + 32.0 / block,
+                                      block=block),
+                        warmup=warmup, reps=reps)
+    print(f"autotune_solve_{n_leaves}x{len(cands)},{us:.0f},"
+          f"rules={len(policy.rules)}")
+    out["solve_us"] = us
+    out["n_leaves"] = n_leaves
+    out["n_candidates"] = len(cands)
+
+    # 3) calibrated policy vs best single 8-bit format, equal budget
+    datas = {}
+    for i in range(4 if quick else 8):
+        sigma = 0.5 + 2.5 * (i / 7.0)
+        xl = rng.lognormal(-4.0, sigma, (64, 128)).astype(np.float32)
+        xl *= rng.choice([-1.0, 1.0], size=xl.shape).astype(np.float32)
+        datas[f"leaf{i}"] = xl
+    specs = []
+    for path, xl in datas.items():
+        dist, srms = leaf_summary(xl, block=block)
+        specs.append(LeafSpec(path=path, size=xl.size, last_dim=128,
+                              dist=dist, scale_rms=srms))
+
+    def mse_of(assign):
+        se = en = 0.0
+        for sp in specs:
+            fmt = named_format(assign(sp))
+            xl = np.asarray(datas[sp.path], np.float64)
+            xb = xl.reshape(-1, block)
+            am = np.abs(xb).max(-1, keepdims=True)
+            s = np.where(am > 0, am / fmt.max_value, 1.0)
+            q = fmt.quantize_value(xb / s) * s
+            se += float(((q - xb) ** 2).sum())
+            en += float((xb * xb).sum())
+        return se / en
+
+    singles = candidate_formats(n_bits=(8,), include_baselines=True)
+    best_single = min(mse_of(lambda sp, n=name: n) for name in singles)
+    pol = solve(specs, candidate_formats(n_bits=(6, 8, 10)),
+                8.0 + 32.0 / block, block=block)
+    ratio = mse_of(lambda sp: pol.match(sp.path).fmt) / best_single
+    print(f"autotune_mse_policy_vs_best_single,{ratio*1000:.1f},"
+          f"ratio={ratio:.3f}")
+    out["mse_ratio"] = ratio
+    return out
+
+
 BENCHES = {
     "table5": bench_table5,
     "table6": bench_table6,
@@ -304,6 +385,7 @@ BENCHES = {
     "compression": bench_compression,
     "kv_quality": bench_kv_quality,
     "fl": bench_fl,
+    "autotune": bench_autotune,
 }
 
 
@@ -319,6 +401,7 @@ def _append_trajectory(results: dict, args) -> None:
         "kernels": results.get("kernels"),
         "sketch": results.get("sketch"),
         "fl": results.get("fl"),
+        "autotune": results.get("autotune"),
         "table5_us": (results.get("table5") or {}).get("us"),
         "table6_us": {k: v["us"] for k, v in
                       (results.get("table6") or {}).items()},
@@ -364,7 +447,7 @@ def main() -> None:
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
-    if {"host_encode", "kernels", "sketch", "fl"} & set(names):
+    if {"host_encode", "kernels", "sketch", "fl", "autotune"} & set(names):
         _append_trajectory(results, args)
 
 

@@ -1,0 +1,200 @@
+"""Autotune study: the paper's accuracy-vs-range trade-off as a policy sweep.
+
+Three experiments, all driven by ``repro.autotune`` (hand-picking a format
+is what this subsystem retires — see DESIGN.md §8):
+
+  1. RANGE SWEEP — ``sketch.choose_grid`` over widening counting ranges:
+     the F2P (flavor, h_bits) partition the closed-form error model picks
+     shifts exactly the way the paper's Tables V/VI describe (more
+     hyper-exponent only when the range demands it).
+  2. POLICY vs BEST SINGLE FORMAT — real FL delta tensors + real KV-cache
+     tensors, calibrated per leaf; ``solve()`` allocates formats under the
+     same bit budget a uniform 8-bit format spends (PACKED-bit accounting:
+     logical format widths; this repo's containers byte-align codes, so
+     part 3 is the separate byte-equal comparison). Acceptance: the policy
+     beats the BEST single hardcoded format on combined quantization MSE.
+  3. FL ROUND TRADE-OFF — fed-avg with the policy re-solved every K rounds
+     from delta histograms vs PR 3's fixed ``f2p_sr_2_8``. Acceptance:
+     matches or beats the fixed format's wire-bytes/loss trade-off.
+
+    PYTHONPATH=src python examples/autotune_study.py [--quick]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# host-side blockwise round-trip MSE for ANY grid format (F2P or baseline)
+# ---------------------------------------------------------------------------
+def block_mse(x, fmt, block: int) -> tuple[float, float]:
+    """(sum squared error, sum squared signal) of blockwise absmax
+    quantization of ``x`` onto ``fmt`` — works for every GridFormat."""
+    x = np.asarray(x, np.float64)
+    x2 = x.reshape(-1, x.shape[-1])
+    n = x2.shape[-1]
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        x2 = np.pad(x2, ((0, 0), (0, pad)))
+    xb = x2.reshape(x2.shape[0], -1, blk)
+    absmax = np.abs(xb).max(axis=-1, keepdims=True)
+    scale = np.where(absmax > 0, absmax / fmt.max_value, 1.0)
+    q = fmt.quantize_value(xb / scale) * scale
+    err = ((q - xb) ** 2).reshape(x2.shape)[:, :n]
+    return float(err.sum()), float((x * x).sum())
+
+
+def collect_tensors(quick: bool):
+    """Real tensors from the two workloads the policy serves: one client's
+    FL delta leaves (toy task) and the K/V projections of a prefill on the
+    smoke llama config."""
+    import jax
+
+    from repro.autotune.policy import leaf_path_str
+    from repro.configs import smoke_config
+    from repro.fl import ClientConfig, toy_task
+    from repro.fl.client import make_client_update, init_client_residuals
+    from repro.fl.rounds import _client_batches, FedAvgConfig
+    from repro.models import init_caches, init_params, prefill
+
+    tensors = {}
+
+    # FL deltas: one uncompressed client round
+    cfg, dcfg, loss_fn, init_fn = toy_task()
+    ccfg = ClientConfig(compress=False)
+    params = init_fn(cfg, jax.random.PRNGKey(0))
+    client = jax.jit(make_client_update(loss_fn, ccfg))
+    fcfg = FedAvgConfig(n_clients=1, rounds=1, client=ccfg)
+    delta, _, _ = client(params, init_client_residuals(params, ccfg),
+                         _client_batches(dcfg, fcfg, 0, 0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(delta)
+    for path, leaf in flat:
+        if leaf.size >= 1024:
+            tensors["fl/" + leaf_path_str(path)] = np.asarray(leaf)
+
+    # KV tensors: unquantized prefill cache of the smoke llama
+    mcfg = smoke_config("llama3_2_3b")
+    mp = init_params(mcfg, jax.random.PRNGKey(1))
+    S = 16 if quick else 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, S), 0,
+                              mcfg.vocab_size)
+    caches = init_caches(mcfg, 2, S, quantized_kv=False)
+    _, caches = prefill(mp, {"tokens": toks}, mcfg, caches)
+    for bname, c in caches.items():
+        for part in ("k", "v"):
+            tensors[f"kv/{bname}/{part}"] = np.asarray(
+                c[part], np.float32).reshape(-1, mcfg.head_dim)
+    return tensors
+
+
+def part1_range_sweep():
+    from repro.sketch import choose_grid
+
+    print("--- 1. counting-range sweep (choose_grid) ---")
+    print(f"{'max_count':>12} {'target':>10}  chosen format        grid max")
+    for mc, tr in ((1e3, None), (1e5, None), (1e5, 1e3), (1e7, 1e4),
+                   (1e9, 1e6), (4e9, None)):
+        fmt, grid = choose_grid(mc, tr)
+        print(f"{mc:12.0e} {tr or mc:10.0e}  {str(fmt):<20} {grid[-1]:.3g}")
+    print()
+
+
+def part2_policy_vs_single(tensors, quick: bool):
+    from repro.autotune import LeafSpec, candidate_formats, leaf_summary, solve
+    from repro.autotune.policy import _leaf_bits
+    from repro.core.formats import named_format
+
+    print("--- 2. per-tensor policy vs best single format "
+          "(equal bit budget) ---")
+    block = 128
+    leaves, data = [], {}
+    for path, x in tensors.items():
+        dist, srms = leaf_summary(x, block=min(block, x.shape[-1]))
+        leaves.append(LeafSpec(path=path, size=int(x.size),
+                               last_dim=int(x.shape[-1]), dist=dist,
+                               scale_rms=srms))
+        data[path] = x
+
+    # the budget a uniform 8-bit format spends on these exact leaves
+    total = sum(sp.size for sp in leaves)
+    budget = sum(_leaf_bits(sp, "f2p_sr_2_8s", block) for sp in leaves) / total
+
+    singles = candidate_formats(n_bits=(8,), include_baselines=True)
+    scores = {}
+    for name in singles:
+        fmt = named_format(name)
+        se = en = 0.0
+        for sp in leaves:
+            s, e = block_mse(data[sp.path], fmt, block)
+            se, en = se + s, en + e
+        scores[name] = se / en
+    best_single = min(scores, key=scores.get)
+    for name in sorted(scores, key=scores.get)[:5]:
+        print(f"  single {name:<14} rel-MSE {scores[name]:.3e}")
+
+    policy = solve(leaves, candidate_formats(n_bits=(6, 8, 10)), budget,
+                   block=block)
+    spent = sum(_leaf_bits(sp, policy.match(sp.path).fmt, block)
+                for sp in leaves) / total
+    se = en = 0.0
+    for sp in leaves:
+        fmt = named_format(policy.match(sp.path).fmt)
+        s, e = block_mse(data[sp.path], fmt, block)
+        se, en = se + s, en + e
+    pol_score = se / en
+    print(f"  policy ({len(leaves)} leaves, {spent:.2f} vs budget "
+          f"{budget:.2f} packed bits/elem) rel-MSE {pol_score:.3e}")
+    ratio = pol_score / scores[best_single]
+    print(f"  policy vs best single ({best_single}): {ratio:.3f}x")
+    ok = pol_score < scores[best_single]
+    print(f"  acceptance (policy beats best single at equal budget): "
+          f"{'PASS' if ok else 'FAIL'}\n")
+    return ok
+
+
+def part3_fl_tradeoff(quick: bool):
+    from repro.fl import (AutotuneConfig, ClientConfig, FedAvgConfig,
+                          run_fed_avg, toy_task)
+
+    print("--- 3. FL rounds: re-solved policy vs fixed f2p_sr_2_8 ---")
+    task = toy_task()
+    rounds = 4 if quick else 6
+    clients = 2 if quick else 4
+    runs = {}
+    for name, at in (("fixed", None), ("autotuned", AutotuneConfig(every=2))):
+        fcfg = FedAvgConfig(n_clients=clients, rounds=rounds,
+                            client=ClientConfig(compress=True), autotune=at)
+        runs[name] = run_fed_avg(fcfg, task)
+    wf, wa = (runs[k]["wire_bytes_per_round"][-1] for k in ("fixed",
+                                                            "autotuned"))
+    lf, la = (runs[k]["eval_loss"][-1] for k in ("fixed", "autotuned"))
+    print(f"  fixed:     wire {wf/1e6:.3f} MB/round, final loss {lf:.4f}")
+    print(f"  autotuned: wire {wa/1e6:.3f} MB/round, final loss {la:.4f} "
+          f"(re-solved at rounds {runs['autotuned']['resolve_rounds']})")
+    ok = wa <= wf * 1.01 and la <= lf * 1.02
+    print(f"  acceptance (wire <= fixed, loss <= 1.02x fixed): "
+          f"{'PASS' if ok else 'FAIL'}\n")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI smoke)")
+    args = ap.parse_args()
+
+    part1_range_sweep()
+    tensors = collect_tensors(args.quick)
+    ok2 = part2_policy_vs_single(tensors, args.quick)
+    ok3 = part3_fl_tradeoff(args.quick)
+    print(f"overall: {'PASS' if ok2 and ok3 else 'FAIL'}")
+    return 0 if ok2 and ok3 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,11 @@ feedback) — and reports the wire-byte reduction and final-loss ratio.
 
 Expected on CPU: ~3.9x fewer wire bytes per round at <= 1.05x the f32 final
 loss (the acceptance bar this repo's CI smoke test enforces).
+
+The F2P8 format here is the hand-picked default; pass
+``FedAvgConfig(autotune=AutotuneConfig())`` to have the per-leaf formats
+re-solved from calibrated delta histograms instead (same wire bytes,
+equal-or-better loss — see examples/autotune_study.py part 3).
 """
 import argparse
 import os

@@ -4,6 +4,11 @@ Loads (or trains briefly) a small LM, then serves a batch of prompts twice —
 exact bf16 cache vs F2P8 cache — and reports memory saved + output agreement.
 
     PYTHONPATH=src python examples/serve_f2p_kv.py
+
+The cache format here is the hardcoded default (attention.KV_FMT); to pick
+formats per layer from calibrated K/V statistics, pass a
+repro.autotune FormatPolicy via ``ServeConfig(kv_policy=...)`` (rule paths
+``kv/b<i>`` — see DESIGN.md §8.4 and examples/autotune_study.py).
 """
 import os
 import sys

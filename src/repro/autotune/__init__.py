@@ -1,0 +1,41 @@
+"""repro.autotune — closed-form error models + the format-policy engine
+(DESIGN.md §8).
+
+The paper's selling point is that F2P *varies* its mantissa/exponent
+partition to trade counting range for accuracy over a selected sub-range —
+this package is the decision layer that actually turns that knob per tensor,
+per layer, per workload instead of hardcoding one format everywhere:
+
+  * :mod:`repro.autotune.error_models` — closed-form expected-MSE /
+    max-relative-error models for every representable format (all F2P
+    flavors × h_bits × n_bits plus the ``formats.py`` baselines) against
+    parameterized input distributions, validated against the f64 grid
+    oracles;
+  * :mod:`repro.autotune.calibrate` — streaming device-side histogram
+    calibration (jit-safe, fixed-shape bins) fitting a distribution summary
+    per tensor from live data;
+  * :mod:`repro.autotune.policy` — ``FormatPolicy`` (leaf-path patterns →
+    chosen format, JSON-serializable into checkpoints) and ``solve()``, the
+    budgeted per-leaf format allocator.
+
+Consumers: ``fl.client`` (per-leaf delta formats, re-solved every K rounds),
+``models.attention`` (per-layer KV-cache formats), ``sketch.choose_grid``
+(counter grids by max-count/target-range), ``train.checkpoint`` (policy
+round-trip), ``configs.registry.default_policy`` (per-model stubs).
+"""
+from repro.autotune.error_models import (Dist, UniformDist, LogNormalDist,
+                                         ZipfDist, HistogramDist,
+                                         expected_mse, max_rel_error)
+from repro.autotune.calibrate import (HistSpec, NORM_SPEC, empty_state,
+                                      update, update_tree, to_dist,
+                                      scale_rms, histogram_of, leaf_summary)
+from repro.autotune.policy import (FormatPolicy, PolicyRule, LeafSpec,
+                                   solve, candidate_formats, leaf_path_str,
+                                   path_from_keystr)
+
+__all__ = ["Dist", "UniformDist", "LogNormalDist", "ZipfDist",
+           "HistogramDist", "expected_mse", "max_rel_error",
+           "HistSpec", "NORM_SPEC", "empty_state", "update", "update_tree",
+           "to_dist", "scale_rms", "histogram_of", "leaf_summary",
+           "FormatPolicy", "PolicyRule", "LeafSpec", "solve",
+           "candidate_formats", "leaf_path_str", "path_from_keystr"]

@@ -1,0 +1,212 @@
+"""Streaming histogram calibration (DESIGN.md §8.2).
+
+Fits a per-tensor distribution summary from live data — device-side,
+jit-safe, fixed shapes throughout, so a calibration update can ride inside
+any existing jitted step (FL round, decode step) without retracing:
+
+  * the state is a tiny pytree of fixed-shape arrays:
+      counts  [n_bins + 2] f32   log2-spaced magnitude bins; bin 0 holds
+                                 zeros + underflow, the last bin overflow
+      absmax  []           f32   running max magnitude
+      n       []           f32   total elements seen
+      msq     []           f32   running sum of per-block absmax^2
+      nblocks []           f32   blocks folded in
+  * ``update`` is one bucketize + scatter-add — no data-dependent shapes,
+    no host sync; states merge by addition (``merge``) so per-shard or
+    per-client histograms combine for free;
+  * ``to_dist`` (host-side) converts a state into the piecewise-uniform
+    :class:`repro.autotune.error_models.HistogramDist` the closed-form error
+    models consume directly.
+
+Block normalization — the part that makes the models match the real codec:
+every production quantizer here is *blockwise absmax-scaled* (QTensor), so
+what actually meets the grid is u = |x| / absmax(block), supported on
+[0, 1], NOT raw |x|. ``update(..., block=B)`` therefore histograms the
+block-normalized magnitudes against ``NORM_SPEC`` (log2 bins on [2^-16, 1])
+and accumulates E[absmax^2] separately; the modeled leaf error factorizes as
+
+    E[err^2] ~= E[e_u^2] * E[absmax_b^2]
+
+(e_u = normalized-grid quantization error). The factorization ignores the
+u/absmax coupling inside a block: on near-gaussian leaves it is a few
+percent, on heavy-tailed leaves it can inflate the absolute estimate a few
+x — but it moves every candidate format by a similar factor, so the format
+RANKING the policy solve consumes survives (tests/test_autotune.py pins
+both the envelope and the ranking). Calibrating raw |x|
+instead silently models a GLOBAL absmax scale and mis-ranks formats whose
+grids differ mainly near the block maximum (SR vs LR — exactly the paper's
+flavor axis). Omitting ``block`` keeps the raw-magnitude mode for
+unscaled-grid users (counters, sketch cells).
+
+Log2-spaced bins are the right shape for this job: every format family here
+(F2P, FP, SEAD) has grid density stratified by binades, so equal-log2 bins
+give the error model roughly constant resolution per exponent bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.error_models import HistogramDist
+
+__all__ = ["HistSpec", "NORM_SPEC", "empty_state", "update", "merge",
+           "update_tree", "to_dist", "scale_rms", "histogram_of",
+           "leaf_summary"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSpec:
+    """Fixed histogram geometry (static jit arg — hashable)."""
+
+    n_bins: int = 64
+    lo_log2: float = -44.0   # below ~5e-14: counted with the zeros
+    hi_log2: float = 20.0    # above ~1e6: overflow bin
+
+    @property
+    def bin_width(self) -> float:
+        return (self.hi_log2 - self.lo_log2) / self.n_bins
+
+
+# block-normalized magnitudes live on [0, 1]: 4 bins per octave down to 2^-16
+NORM_SPEC = HistSpec(n_bins=64, lo_log2=-16.0, hi_log2=0.0)
+
+
+def empty_state(spec: HistSpec = HistSpec()) -> dict:
+    return {"counts": jnp.zeros(spec.n_bins + 2, jnp.float32),
+            "absmax": jnp.float32(0.0),
+            "n": jnp.float32(0.0),
+            "msq": jnp.float32(0.0),
+            "nblocks": jnp.float32(0.0)}
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block"))
+def update(state: dict, x, spec: HistSpec = HistSpec(),
+           block: int | None = None) -> dict:
+    """Fold a tensor into the state. Fixed-shape, jit-safe.
+
+    With ``block`` set, magnitudes are normalized by their block's absmax
+    (capped at the last dim, zero-padded like the codec) before binning —
+    use ``NORM_SPEC`` then. Without it, raw magnitudes are binned. Scalar
+    (0-d) inputs are treated as one-element vectors (their own block)."""
+    x = jnp.asarray(x)
+    if x.ndim == 0:
+        x = x.reshape(1)
+    mag = jnp.abs(x.astype(jnp.float32))
+    # sanitize FIRST: one NaN would otherwise poison every max/sum moment;
+    # NaN elements are remembered and binned as overflow below
+    nan = jnp.isnan(mag)
+    mag = jnp.where(nan, 0.0, mag)
+    if block is not None:
+        blk = max(1, min(int(block), mag.shape[-1]))
+        pad = (-mag.shape[-1]) % blk
+        m2 = mag.reshape(-1, mag.shape[-1])
+        n2 = nan.reshape(-1, nan.shape[-1])
+        if pad:
+            m2 = jnp.pad(m2, ((0, 0), (0, pad)))
+            n2 = jnp.pad(n2, ((0, 0), (0, pad)))
+        mb = m2.reshape(m2.shape[0], -1, blk)
+        am = mb.max(axis=-1, keepdims=True)
+        u = jnp.where(am > 0, mb / am, 0.0)
+        # padded lanes are exact zeros -> bin 0, same as codec padding
+        msq = state["msq"] + jnp.sum(am[..., 0] ** 2)
+        nblocks = state["nblocks"] + jnp.float32(am.size)
+        absmax = jnp.maximum(state["absmax"], mb.max())
+        vals = u.ravel()
+        nan_flat = n2.ravel()
+        n_new = jnp.float32(mag.size)
+    else:
+        vals = mag.ravel()
+        nan_flat = nan.ravel()
+        msq, nblocks = state["msq"], state["nblocks"]
+        absmax = jnp.maximum(state["absmax"], vals.max())
+        n_new = jnp.float32(vals.size)
+
+    logm = jnp.log2(jnp.maximum(vals, jnp.float32(1e-45)))
+    b = jnp.floor((logm - spec.lo_log2) / spec.bin_width).astype(jnp.int32)
+    b = jnp.clip(b, -1, spec.n_bins)
+    # values AT the top edge (u == 1 for every block absmax) belong to the
+    # top in-range bin, not overflow
+    hi_val = jnp.float32(2.0 ** spec.hi_log2)
+    b = jnp.where(vals <= hi_val, jnp.minimum(b, spec.n_bins - 1), b) + 1
+    b = jnp.where(vals > 0, b, 0)                # zeros -> bin 0
+    b = jnp.where(nan_flat, spec.n_bins + 1, b)  # NaN -> overflow
+    counts = state["counts"].at[b].add(1.0)
+    return {"counts": counts, "absmax": absmax, "n": state["n"] + n_new,
+            "msq": msq, "nblocks": nblocks}
+
+
+def merge(a: dict, b: dict) -> dict:
+    """Combine two states (per-shard / per-client histograms add up)."""
+    return {"counts": a["counts"] + b["counts"],
+            "absmax": jnp.maximum(a["absmax"], b["absmax"]),
+            "n": a["n"] + b["n"],
+            "msq": a["msq"] + b["msq"],
+            "nblocks": a["nblocks"] + b["nblocks"]}
+
+
+def update_tree(states: dict, tree, spec: HistSpec = NORM_SPEC,
+                *, block: int | None = 128, min_size: int = 1,
+                prefix: str = "") -> dict:
+    """Fold every float leaf of ``tree`` into ``states`` (a dict keyed by
+    leaf-path string; missing keys are created). Returns the new dict."""
+    from repro.autotune.policy import leaf_path_str
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = dict(states)
+    for path, leaf in flat:
+        if not (hasattr(leaf, "size") and leaf.size >= min_size
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            continue
+        key = prefix + leaf_path_str(path)
+        out[key] = update(out.get(key, empty_state(spec)), leaf, spec, block)
+    return out
+
+
+def to_dist(state: dict, spec: HistSpec = HistSpec()) -> HistogramDist:
+    """Host-side: state -> piecewise-uniform HistogramDist over magnitudes.
+
+    Bin 0 (zeros + underflow) becomes a [0, 2^lo] bin — the modeled error
+    for that mass is bounded by 2^lo, i.e. negligible against any format
+    with a zero point. The overflow bin stretches to the observed absmax."""
+    counts = np.asarray(state["counts"], np.float64)
+    absmax = float(state["absmax"])
+    total = counts.sum()
+    if total <= 0:
+        raise ValueError("empty calibration state")
+    edges = [0.0]
+    edges += [2.0 ** (spec.lo_log2 + i * spec.bin_width)
+              for i in range(spec.n_bins + 1)]
+    top = max(absmax, edges[-1] * 2.0)
+    edges.append(top * (1.0 + 1e-9))
+    return HistogramDist(edges=tuple(edges), probs=tuple(counts / total))
+
+
+def scale_rms(state: dict) -> float:
+    """sqrt(E[absmax_block^2]) — the block-normalized model's multiplier.
+    Falls back to the global absmax when no blocks were folded, or when the
+    f32 second-moment accumulator saturated (|x| beyond ~2^63: am^2
+    overflows — absmax is then the conservative upper bound)."""
+    nb = float(state["nblocks"])
+    if nb > 0:
+        rms = float(np.sqrt(float(state["msq"]) / nb))
+        if np.isfinite(rms):
+            return rms
+    return float(state["absmax"])
+
+
+def histogram_of(x, spec: HistSpec = HistSpec()) -> tuple[HistogramDist, float]:
+    """One-shot host convenience: (dist, absmax) of raw magnitudes."""
+    state = update(empty_state(spec), jnp.asarray(x), spec)
+    return to_dist(state, spec), float(state["absmax"])
+
+
+def leaf_summary(x, block: int = 128,
+                 spec: HistSpec = NORM_SPEC) -> tuple[HistogramDist, float]:
+    """One-shot host convenience for the block-normalized model:
+    (dist of u = |x|/absmax_block, sqrt(E[absmax_block^2]))."""
+    state = update(empty_state(spec), jnp.asarray(x), spec, block)
+    return to_dist(state, spec), scale_rms(state)

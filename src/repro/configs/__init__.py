@@ -1,3 +1,4 @@
 from repro.configs.registry import (ARCH_IDS, SHAPES, full_config,
                                     smoke_config, input_specs, get_arch,
-                                    shape_is_applicable, canon)
+                                    shape_is_applicable, canon,
+                                    default_policy)

@@ -55,6 +55,47 @@ def smoke_config(arch: str):
     return get_arch(arch).smoke()
 
 
+# ---------------------------------------------------------------------------
+# Per-model default format policies (repro.autotune.policy). Rule-path
+# domains are the conventions the call sites use: "grad/*" (gradient
+# compression), "kv/*" (quantized KV cache, per pattern position "kv/b<i>"),
+# "ckpt/*" (checkpoint payload leaves), "fl/*" (federated deltas). These are
+# STUBS — sane hand-picked defaults per family; a calibrated
+# ``repro.autotune.solve`` run supersedes them per workload.
+# ---------------------------------------------------------------------------
+_BASE_POLICY_RULES = (
+    # "grad*" (not "grad/*") so the bare domain root "grad" matches too
+    ("grad*", "f2p_sr_2_8s", 128),
+    ("kv*", "f2p_sr_2_8s", 0),
+    ("ckpt*", "f2p_sr_2_16s", 128),
+    ("fl*", "f2p_sr_2_8s", 128),
+)
+
+# per-arch overrides, matched before the base rules
+_ARCH_POLICY_RULES = {
+    # MoE stacks: expert FF grads are wide and smooth — bigger blocks halve
+    # the scale overhead at unchanged accuracy
+    "llama4_maverick_400b": (("grad/*ff*", "f2p_sr_2_8s", 256),),
+    "llama4_scout_17b": (("grad/*ff*", "f2p_sr_2_8s", 256),),
+    "jamba_1_5_large": (("grad/*ff*", "f2p_sr_2_8s", 256),),
+    # enc-dec audio: encoder KV ranges are narrow — spend the hyper-exp bit
+    # on mantissa (H=1) instead of range
+    "whisper_large_v3": (("kv/*", "f2p_sr_1_8s", 0),),
+}
+
+
+def default_policy(arch: str):
+    """The arch's default :class:`repro.autotune.policy.FormatPolicy`."""
+    from repro.autotune.policy import FormatPolicy, PolicyRule
+
+    name = canon(arch)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    rules = _ARCH_POLICY_RULES.get(name, ()) + _BASE_POLICY_RULES
+    return FormatPolicy(rules=tuple(PolicyRule(pattern=p, fmt=f, block=b)
+                                    for p, f, b in rules))
+
+
 def shape_is_applicable(cfg, shape_name: str) -> tuple[bool, str]:
     """Assignment rules: long_500k only for sub-quadratic stacks."""
     if shape_name == "long_500k" and not cfg.is_subquadratic:

@@ -15,11 +15,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import re
 
 import numpy as np
 
 __all__ = ["GridFormat", "IntFormat", "FPFormat", "SEADFormat",
-           "fp16", "bf16", "tf32", "named_format"]
+           "fp16", "bf16", "tf32", "named_format", "format_name",
+           "format_bits"]
 
 
 class GridFormat:
@@ -155,25 +157,76 @@ class SEADFormat(GridFormat):
         return f"SEAD{self.n_bits}{'s' if self.signed else 'u'}"
 
 
+def format_name(fmt) -> str:
+    """Canonical parseable name of any format this repo can represent.
+
+    The inverse of :func:`named_format`: ``named_format(format_name(f)) == f``
+    for every IntFormat / FPFormat / SEADFormat / F2PFormat (the property test
+    in tests/test_format_names.py pins this). Signedness is encoded as a
+    trailing 's'/'u' so names are self-contained — no side-channel ``signed``
+    argument needed to round-trip."""
+    from repro.core.f2p import F2PFormat
+
+    s = "s" if getattr(fmt, "signed", False) else "u"
+    if isinstance(fmt, IntFormat):
+        return f"int{fmt.n_bits}{s}"
+    if isinstance(fmt, SEADFormat):
+        return f"sead{fmt.n_bits}{s}"
+    if isinstance(fmt, FPFormat):
+        return f"{fmt.m_bits}m{fmt.e_bits}e{s}"
+    if isinstance(fmt, F2PFormat):
+        return f"f2p_{fmt.flavor.value}_{fmt.h_bits}_{fmt.n_bits}{s}"
+    raise TypeError(f"no canonical name for {type(fmt).__name__}")
+
+
+def format_bits(fmt) -> int:
+    """Total storage bits per value (incl. sign bit where applicable)."""
+    from repro.core.f2p import F2PFormat
+
+    if isinstance(fmt, (IntFormat, SEADFormat, F2PFormat)):
+        return fmt.n_bits
+    if isinstance(fmt, FPFormat):
+        return fmt.m_bits + fmt.e_bits + (1 if fmt.signed else 0)
+    raise TypeError(f"no bit width for {type(fmt).__name__}")
+
+
+# every spelling named_format accepts; signedness suffix is optional — when
+# absent the `signed` argument decides (legacy call convention)
+_NAME_RES = {
+    "int": re.compile(r"int(\d+)([su]?)"),
+    "sead": re.compile(r"sead(\d+)([su]?)"),
+    "alias": re.compile(r"(fp16|bf16|tf32)([su]?)"),
+    "fp": re.compile(r"(\d+)m(\d+)e([su]?)"),
+    "f2p": re.compile(r"f2p_(sr|lr|si|li)_(\d+)_(\d+)([su]?)"),
+    # str(F2PFormat) spelling, e.g. "f2p_sr^2[8s]"
+    "f2p_str": re.compile(r"f2p_(sr|lr|si|li)\^(\d+)\[(\d+)([su])\]"),
+}
+
+
 def named_format(name: str, signed: bool = False) -> GridFormat:
-    """Parse 'int8', '5m2e', 'fp16', 'bf16', 'tf32', 'sead8', 'f2p_sr_2_8'."""
+    """Parse a format name: 'int8', '5m2e', 'fp16', 'bf16', 'tf32', 'sead8',
+    'f2p_sr_2_8' — each optionally suffixed 's'/'u' ('int8s') — plus the
+    ``str()`` spellings every format emits ('INT8s', '10M5Eu', 'F2P_SR^2[8s]').
+    An explicit suffix wins over the ``signed`` argument."""
     from repro.core.f2p import F2PFormat, Flavor
 
-    name = name.lower()
-    if name.startswith("int"):
-        return IntFormat(int(name[3:]), signed=signed)
-    if name.startswith("sead"):
-        return SEADFormat(int(name[4:]), signed=signed)
-    if name == "fp16":
-        return fp16(signed)
-    if name == "bf16":
-        return bf16(signed)
-    if name == "tf32":
-        return tf32(signed)
-    if "m" in name and name.endswith("e"):
-        m, e = name[:-1].split("m")
-        return FPFormat(m_bits=int(m), e_bits=int(e), signed=signed)
-    if name.startswith("f2p"):
-        _, fl, h, n = name.split("_")
-        return F2PFormat(n_bits=int(n), h_bits=int(h), flavor=Flavor(fl), signed=signed)
+    name = name.lower().strip()
+
+    def sgn(suffix: str) -> bool:
+        return signed if not suffix else suffix == "s"
+
+    if m := _NAME_RES["int"].fullmatch(name):
+        return IntFormat(int(m[1]), signed=sgn(m[2]))
+    if m := _NAME_RES["sead"].fullmatch(name):
+        return SEADFormat(int(m[1]), signed=sgn(m[2]))
+    if m := _NAME_RES["alias"].fullmatch(name):
+        return {"fp16": fp16, "bf16": bf16, "tf32": tf32}[m[1]](sgn(m[2]))
+    if m := _NAME_RES["fp"].fullmatch(name):
+        return FPFormat(m_bits=int(m[1]), e_bits=int(m[2]), signed=sgn(m[3]))
+    if m := _NAME_RES["f2p"].fullmatch(name):
+        return F2PFormat(n_bits=int(m[3]), h_bits=int(m[2]),
+                         flavor=Flavor(m[1]), signed=sgn(m[4]))
+    if m := _NAME_RES["f2p_str"].fullmatch(name):
+        return F2PFormat(n_bits=int(m[3]), h_bits=int(m[2]),
+                         flavor=Flavor(m[1]), signed=m[4] == "s")
     raise ValueError(f"unknown format {name!r}")

@@ -9,4 +9,5 @@ fed-avg. The third serving scenario after LLM decode and sketch ingest.
 from repro.fl.client import (ClientConfig, init_client_residuals,
                              make_client_update)
 from repro.fl.server import aggregate, apply_update, wire_bytes
-from repro.fl.rounds import FedAvgConfig, run_fed_avg, toy_task
+from repro.fl.rounds import (AutotuneConfig, FedAvgConfig, run_fed_avg,
+                             toy_task)

@@ -14,13 +14,21 @@ The update pytree holds a QTensor per compressible leaf (float, size >=
 bytes don't matter, their precision does). Everything is jittable: QTensor
 is a registered pytree, so the whole client round compiles to one XLA
 program and the quantization runs as fused tile math inside it.
+
+Per-leaf formats: ``ClientConfig.policy`` (a
+:class:`repro.autotune.policy.FormatPolicy`) overrides ``fmt``/``block``
+per delta leaf by path pattern — the knob ``repro.fl.rounds`` re-solves
+every K rounds from calibrated delta histograms. With ``policy=None`` the
+single hardcoded format applies everywhere (the PR-3 behavior).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
@@ -39,6 +47,7 @@ class ClientConfig:
     block: int = 128
     min_size: int = 1024
     error_feedback: bool = True
+    policy: Any = None   # FormatPolicy | None: per-leaf format overrides
 
 
 def init_client_residuals(params, ccfg: ClientConfig):
@@ -53,22 +62,40 @@ def init_client_residuals(params, ccfg: ClientConfig):
         params)
 
 
+def leaf_formats(delta, ccfg: ClientConfig):
+    """[(path_str, fmt, block)] per delta leaf, policy-resolved. The path
+    normal form ('blocks/b0/mixer/wq') is what policy rules match and what
+    ``rounds`` keys its calibration histograms by."""
+    from repro.autotune.policy import leaf_path_str
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(delta)
+    out = []
+    for path, d in flat:
+        p = leaf_path_str(path)
+        fmt, blk = ccfg.fmt, ccfg.block
+        if ccfg.policy is not None:
+            fmt, blk = ccfg.policy.f2p_for(p, (fmt, blk))
+        out.append((p, fmt, min(blk, d.shape[-1]) if d.ndim else blk))
+    return out
+
+
 def _quantize_delta(delta, residuals, ccfg: ClientConfig):
     """delta pytree -> (update pytree with QTensor leaves, new residuals)."""
     flat_d, td = jax.tree.flatten(delta)
     flat_r, rtd = jax.tree.flatten(residuals, is_leaf=_is_none)
+    fmts = leaf_formats(delta, ccfg)
 
     ups, res = [], []
-    for d, r in zip(flat_d, flat_r):
+    for d, r, (_, fmt, blk) in zip(flat_d, flat_r, fmts):
         big = (d.size >= ccfg.min_size
                and jnp.issubdtype(d.dtype, jnp.floating))
         if not (ccfg.compress and big):
             ups.append(d)
             res.append(r)
             continue
-        blk = min(ccfg.block, d.shape[-1])
         npad = -(-d.shape[-1] // blk) * blk
-        wire = (d.size // d.shape[-1]) * (npad + (npad // blk) * 4)
+        code_b = np.dtype(fmt.code_dtype).itemsize
+        wire = (d.size // d.shape[-1]) * (npad * code_b + (npad // blk) * 4)
         if wire >= d.size * 4:
             # codec would not shrink this leaf (e.g. [N, 1]: 1B code + 4B
             # scale per element vs 4B raw) — ship it raw
@@ -76,9 +103,9 @@ def _quantize_delta(delta, residuals, ccfg: ClientConfig):
             res.append(r)
             continue
         din = d + (r if r is not None else 0.0)
-        # cap the block at the leaf's last dim: a 128-block on a 32-wide
-        # leaf would pad codes 4x and erase the wire win
-        qt = QT.quantize(din, ccfg.fmt, block=blk)
+        # block already capped at the leaf's last dim: a 128-block on a
+        # 32-wide leaf would pad codes 4x and erase the wire win
+        qt = QT.quantize(din, fmt, block=blk)
         ups.append(qt)
         res.append(din - qt.dequantize(jnp.float32) if r is not None else r)
     return td.unflatten(ups), jax.tree.unflatten(rtd, res)

@@ -12,11 +12,20 @@ plus one aggregation.
 ``run_fed_avg`` is what the convergence test, ``examples/fed_avg.py``, and
 ``benchmarks/run.py --only fl`` all drive; the baseline is the same driver
 with ``compress=False`` (f32 deltas on the wire).
+
+Autotuned formats: with ``FedAvgConfig.autotune`` set, the server folds every
+aggregated delta into streaming histograms (repro.autotune.calibrate) and
+every K rounds re-solves a per-leaf :class:`FormatPolicy`
+(repro.autotune.policy.solve) under the fixed config's bit budget — clients
+then quantize each leaf with the format the calibrated error model picked
+instead of one hardcoded F2P format. A policy change rebuilds (re-jits) the
+client function; between re-solves the round is exactly as cheap as before.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +36,29 @@ from repro.fl import server as S
 
 
 @dataclasses.dataclass(frozen=True)
+class AutotuneConfig:
+    """Re-solve the per-leaf delta format every ``every`` rounds.
+
+    ``n_bits`` defaults to the fixed format's width only — every candidate
+    then stores codes in the same dtype, so re-solving never changes wire
+    bytes, only where the representable points sit (the apples-to-apples
+    comparison ``examples/autotune_study.py`` makes against PR 3's fixed
+    ``f2p_sr_2_8``). Budgets beyond that are opt-in via ``n_bits``."""
+
+    every: int = 2
+    n_bits: tuple[int, ...] = (8,)
+    h_bits: tuple[int, ...] = (1, 2, 3)
+    budget_bits_per_elem: float | None = None  # None: match fixed config
+
+
+@dataclasses.dataclass(frozen=True)
 class FedAvgConfig:
     n_clients: int = 4
     rounds: int = 5
     client: C.ClientConfig = C.ClientConfig()
     server_lr: float = 1.0
     seed: int = 0
+    autotune: Any = None   # AutotuneConfig | None
 
 
 def toy_task(*, d_model: int = 64, n_layers: int = 2, vocab: int = 512,
@@ -65,18 +91,55 @@ def _client_batches(dcfg, fcfg: FedAvgConfig, round_i: int, client_i: int):
     return {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
 
 
+def _solve_policy(calib: dict, meta: dict, fcfg: FedAvgConfig):
+    """Calibrated histograms -> per-leaf FormatPolicy at the fixed config's
+    bit budget. Returns None when nothing has calibrated yet."""
+    from repro.autotune import calibrate as CAL
+    from repro.autotune import policy as P
+    from repro.core.formats import format_name
+
+    atcfg, ccfg = fcfg.autotune, fcfg.client
+    leaves = []
+    for path, (size, last_dim) in meta.items():
+        if path not in calib:
+            continue
+        try:
+            dist = CAL.to_dist(calib[path], CAL.NORM_SPEC)
+        except ValueError:
+            continue
+        leaves.append(P.LeafSpec(path=path, size=size, last_dim=last_dim,
+                                 dist=dist,
+                                 scale_rms=CAL.scale_rms(calib[path])))
+    if not leaves:
+        return None
+    fixed = format_name(ccfg.fmt)
+    cands = P.candidate_formats(n_bits=atcfg.n_bits, h_bits=atcfg.h_bits,
+                                signed=True)
+    if fixed not in cands:
+        cands.append(fixed)
+    budget = atcfg.budget_bits_per_elem
+    if budget is None:  # equal budget with the fixed single-format config
+        tot = sum(sp.size for sp in leaves)
+        budget = sum(P._leaf_bits(sp, fixed, ccfg.block)
+                     for sp in leaves) / tot
+    return P.solve(leaves, cands, budget, block=ccfg.block)
+
+
 def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
     """Run the simulator; returns a history dict:
 
     ``eval_loss`` per round (held-out deterministic batch), ``client_loss``
     (mean of final local losses), ``wire_bytes_per_round`` (sum over
-    clients), ``round_seconds`` (wall, post-compile), ``params``."""
+    clients), ``round_seconds`` (wall, post-compile), ``params``; with
+    autotune on, also ``policy`` (the last solved FormatPolicy) and
+    ``resolve_rounds``."""
     cfg, dcfg, loss_fn, init_params_fn = task or toy_task()
     params = init_params_fn(cfg, jax.random.PRNGKey(fcfg.seed))
     residuals = [C.init_client_residuals(params, fcfg.client)
                  for _ in range(fcfg.n_clients)]
 
-    client_fn = jax.jit(C.make_client_update(loss_fn, fcfg.client))
+    ccfg = fcfg.client
+    client_fn = jax.jit(C.make_client_update(loss_fn, ccfg))
     agg_fn = jax.jit(lambda ups: S.aggregate(ups))
     apply_fn = jax.jit(
         lambda p, d: S.apply_update(p, d, server_lr=fcfg.server_lr))
@@ -86,8 +149,11 @@ def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
     eval_batch = {k: jnp.asarray(v)
                   for k, v in global_batch(dcfg, 1_000_003).items()}
 
+    autotuning = fcfg.autotune is not None and ccfg.compress
+    calib: dict = {}
+
     hist = {"eval_loss": [], "client_loss": [], "wire_bytes_per_round": [],
-            "round_seconds": []}
+            "round_seconds": [], "policy": None, "resolve_rounds": []}
     for r in range(fcfg.rounds):
         t0 = time.perf_counter()
         updates, round_losses = [], []
@@ -97,6 +163,30 @@ def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
             updates.append(upd)
             round_losses.append(float(losses[-1]))
         delta = agg_fn(tuple(updates))
+        if autotuning:
+            from repro.autotune import calibrate as CAL
+            from repro.autotune.policy import leaf_path_str
+
+            calib = CAL.update_tree(calib, delta, CAL.NORM_SPEC,
+                                    block=ccfg.block,
+                                    min_size=ccfg.min_size)
+            if (r + 1) % fcfg.autotune.every == 0:
+                flat, _ = jax.tree_util.tree_flatten_with_path(delta)
+                meta = {leaf_path_str(p): (int(d.size), int(d.shape[-1]))
+                        for p, d in flat
+                        if d.size >= ccfg.min_size
+                        and jnp.issubdtype(d.dtype, jnp.floating)}
+                policy = _solve_policy(calib, meta, fcfg)
+                if policy is not None and policy != ccfg.policy:
+                    # unchanged policies skip the rebuild — re-jitting the
+                    # client costs more than the whole round on CPU
+                    ccfg = dataclasses.replace(fcfg.client, policy=policy)
+                    client_fn = jax.jit(C.make_client_update(loss_fn, ccfg))
+                    hist["policy"] = policy
+                    hist["resolve_rounds"].append(r)
+                    if verbose:
+                        print(f"round {r}: re-solved format policy\n"
+                              f"{policy.describe()}", flush=True)
         params = apply_fn(params, delta)
         ev = float(eval_fn(params, eval_batch))
         jax.block_until_ready(params)

@@ -49,9 +49,16 @@ def main():
     from repro.train import checkpoint, init_train_state, make_train_step
     from repro.train.async_ckpt import AsyncCheckpointer
 
+    from repro.configs import default_policy
+
     cfg = full_config(args.arch) if args.full else smoke_config(args.arch)
     ocfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
-    ccfg = CompressionConfig(enabled=not args.no_compress, min_size=512)
+    # formats come from the arch's default FormatPolicy (configs.registry),
+    # not inline constants — per-model tuning lives in ONE place
+    policy = default_policy(args.arch)
+    gfmt, gblock = policy.f2p_for("grad", (CompressionConfig.fmt, 128))
+    ccfg = CompressionConfig(enabled=not args.no_compress, min_size=512,
+                             fmt=gfmt, block=gblock)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=args.global_batch)
 
@@ -81,7 +88,7 @@ def main():
             os.makedirs(args.ckpt_dir, exist_ok=True)
 
         step_fn = jax.jit(make_train_step(cfg, ocfg, ccfg), donate_argnums=0)
-        ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3)
+        ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3, policy=policy)
         for step in range(start, args.steps):
             if step == args.die_at_step:
                 print(f"SIMULATED PREEMPTION at step {step}", flush=True)

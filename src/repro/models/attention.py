@@ -36,10 +36,14 @@ def init_attention(key, cfg, cross: bool = False):
 
 # ---------------------------------------------------------------------------
 # KV quantization (per-(position, head) scale over the head_dim axis ==
-# canonical QTensor blocking with block = head_dim)
+# canonical QTensor blocking with block = head_dim). The format is per-cache:
+# ``init_cache(..., fmt=...)`` takes the policy-chosen format for its layer
+# (repro.autotune.policy via models.init_caches(kv_policy=...)); writes read
+# the format back off the live cache QTensor, so mixed-format stacks need no
+# extra plumbing.
 # ---------------------------------------------------------------------------
-def quantize_kv(k) -> QTensor:
-    return QT.quantize(k, KV_FMT, block=k.shape[-1])
+def quantize_kv(k, fmt: F2PFormat = KV_FMT) -> QTensor:
+    return QT.quantize(k, fmt, block=k.shape[-1])
 
 
 def dequantize_kv(qt: QTensor, dtype):
@@ -271,15 +275,22 @@ def _attend(q, k, v, cfg, *, causal, kv_len=None, q_offset=0):
 # ---------------------------------------------------------------------------
 # Cache plumbing
 # ---------------------------------------------------------------------------
-def init_cache(cfg, batch, max_seq, quantized: bool, dtype):
+def init_cache(cfg, batch, max_seq, quantized: bool, dtype,
+               fmt: F2PFormat = KV_FMT):
     K, hd = cfg.n_kv_heads, cfg.head_dim
     if quantized:
+        # the code of VALUE zero (flavor-dependent: 0 for SR/SI, the top
+        # payload code for LR/LI) + unit scales -> slots decode to exact 0.0
+        import numpy as np
+
+        zero_code = int(fmt.encode_nearest(np.zeros(1))[0])
+
         def empty():
-            # zero codes decode to exact 0.0; unit scales keep them there
             return QTensor.from_parts(
-                jnp.zeros((batch, max_seq, K, hd), jnp.uint8),
+                jnp.full((batch, max_seq, K, hd), zero_code,
+                         jnp.dtype(fmt.code_dtype)),
                 jnp.ones((batch, max_seq, K, 1), jnp.float32),
-                KV_FMT, hd, (batch, max_seq, K, hd))
+                fmt, hd, (batch, max_seq, K, hd))
 
         return {"k": empty(), "v": empty()}
     return {"k": jnp.zeros((batch, max_seq, K, hd), dtype),
@@ -288,8 +299,9 @@ def init_cache(cfg, batch, max_seq, quantized: bool, dtype):
 
 def _cache_write(cache, k, v, idx):
     if isinstance(cache["k"], QTensor):
-        return {"k": cache["k"].dynamic_update(quantize_kv(k), idx, axis=1),
-                "v": cache["v"].dynamic_update(quantize_kv(v), idx, axis=1)}
+        kf, vf = cache["k"].fmt, cache["v"].fmt
+        return {"k": cache["k"].dynamic_update(quantize_kv(k, kf), idx, axis=1),
+                "v": cache["v"].dynamic_update(quantize_kv(v, vf), idx, axis=1)}
     upd = jax.lax.dynamic_update_slice_in_dim
     return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
 

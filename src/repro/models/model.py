@@ -254,14 +254,24 @@ def train_forward(params, batch, cfg: ModelConfig):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
-                quantized_kv: bool = False):
-    """Cache pytree with leading [G] dim per pattern position."""
+                quantized_kv: bool = False, kv_policy=None):
+    """Cache pytree with leading [G] dim per pattern position.
+
+    ``kv_policy`` (repro.autotune.policy.FormatPolicy | None) picks the
+    quantized-KV format per pattern position: rule paths are ``kv/b<i>``
+    (so ``kv/*`` sets a stack-wide format and exact paths override single
+    layers). Positions inside one scan group share a format by construction
+    — the pattern position IS the per-layer granularity the scan admits."""
     G = cfg.n_groups
     dt = cfg.jnp_dtype
 
-    def one(spec: BlockSpec):
+    def one(i: int, spec: BlockSpec):
         if spec.mixer == "attn":
-            return A.init_cache(cfg, batch, max_seq, quantized_kv, dt)
+            fmt = A.KV_FMT
+            if kv_policy is not None:
+                fmt, _ = kv_policy.f2p_for(f"kv/b{i}", (fmt, 0))
+            return A.init_cache(cfg, batch, max_seq, quantized_kv, dt,
+                                fmt=fmt)
         if spec.mixer == "mamba":
             return SSM.init_mamba_cache(cfg, batch, dt)
         if spec.mixer == "mlstm":
@@ -269,7 +279,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
         if spec.mixer == "slstm":
             return XL.init_slstm_cache(cfg, batch)
 
-    caches = {f"b{i}": one(spec) for i, spec in enumerate(cfg.pattern)}
+    caches = {f"b{i}": one(i, spec) for i, spec in enumerate(cfg.pattern)}
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (G,) + x.shape), caches)
 
 

@@ -25,6 +25,9 @@ class ServeConfig:
     quantized_kv: bool = False
     temperature: float = 0.0   # 0 = greedy
     seed: int = 0              # PRNG stream for temperature sampling
+    # per-layer KV formats (repro.autotune.policy.FormatPolicy | None);
+    # None keeps the single hardcoded attention.KV_FMT everywhere
+    kv_policy: Any = None
 
 
 def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
@@ -69,7 +72,8 @@ class Engine:
         B, S = prompts.shape
         assert B == self.scfg.batch
         caches = init_caches(self.cfg, B, self.scfg.max_seq,
-                             quantized_kv=self.scfg.quantized_kv)
+                             quantized_kv=self.scfg.quantized_kv,
+                             kv_policy=self.scfg.kv_policy)
         batch = {"tokens": jnp.asarray(prompts)}
         logits, caches = self._prefill(self.params, batch, caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

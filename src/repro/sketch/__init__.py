@@ -5,7 +5,7 @@ See DESIGN.md §6 for layout, hashing, dispatch policy, and sharding.
 """
 from repro.sketch.hashing import (fold_u64, hash_rows, hash_rows_np,
                                   make_hash_params)
-from repro.sketch.sketch import F2PSketch, SketchConfig
+from repro.sketch.sketch import F2PSketch, SketchConfig, choose_grid
 
-__all__ = ["F2PSketch", "SketchConfig", "hash_rows", "hash_rows_np",
-           "make_hash_params", "fold_u64"]
+__all__ = ["F2PSketch", "SketchConfig", "choose_grid", "hash_rows",
+           "hash_rows_np", "make_hash_params", "fold_u64"]

@@ -38,7 +38,55 @@ from repro.kernels import dispatch
 from repro.kernels import f2p_counter as FC
 from repro.sketch.hashing import hash_rows, hash_rows_np, make_hash_params
 
-__all__ = ["SketchConfig", "F2PSketch"]
+__all__ = ["SketchConfig", "F2PSketch", "choose_grid"]
+
+
+def choose_grid(max_count: float, target_range: float | None = None, *,
+                n_bits_options=(8, 12, 16), h_bits_options=(1, 2, 3),
+                flavors=("li", "si")):
+    """Pick the cheapest F2P counter format that reaches ``max_count``,
+    minimizing the modeled counting error over ``[0, target_range]``.
+
+    This is the paper's range/accuracy knob turned automatically: among all
+    (flavor, h_bits) partitions at the smallest viable register width, the
+    closed-form error model (repro.autotune.error_models, counts uniform on
+    the target range) scores the grids and the flattest one over the range
+    the caller actually counts in wins. Returns ``(fmt, grid)``; feed the
+    fields into :class:`SketchConfig` or use
+    :meth:`SketchConfig.for_requirements`.
+
+    ``target_range`` defaults to ``max_count`` (whole-range accuracy);
+    passing a smaller value buys accuracy where the counts actually live —
+    e.g. heavy-tailed flow tables whose median flow is orders of magnitude
+    below the top talker."""
+    from repro.autotune.error_models import UniformDist, expected_mse
+    from repro.core.f2p import F2PFormat, Flavor
+
+    if max_count <= 0:
+        raise ValueError(f"max_count must be positive, got {max_count}")
+    rng_hi = float(target_range if target_range is not None else max_count)
+    rng_hi = min(rng_hi, float(max_count))
+    dist = UniformDist(0.0, rng_hi)
+
+    for n in sorted(n_bits_options):
+        best = None
+        for h in h_bits_options:
+            for fl in flavors:
+                try:
+                    fmt = F2PFormat(n_bits=n, h_bits=h, flavor=Flavor(fl))
+                except ValueError:
+                    continue
+                grid = fmt.payload_grid
+                if grid[-1] < max_count:
+                    continue
+                err = expected_mse(fmt, dist)
+                if best is None or err < best[0]:
+                    best = (err, fmt, grid)
+        if best is not None:
+            return best[1], best[2]
+    raise ValueError(
+        f"no candidate reaches max_count={max_count:g}; widest grid tops at "
+        "less — raise n_bits_options")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +101,16 @@ class SketchConfig:
     conservative: bool = False  # batched conservative update (top-up form)
     seed: int = 0
     backend: str | None = None  # dispatch backend; None = registry policy
+
+    @classmethod
+    def for_requirements(cls, max_count: float,
+                         target_range: float | None = None,
+                         **kw) -> "SketchConfig":
+        """SketchConfig whose cell format ``choose_grid`` picked for the
+        workload's (max_count, target_range). Other fields pass through."""
+        fmt, _ = choose_grid(max_count, target_range)
+        return cls(n_bits=fmt.n_bits, h_bits=fmt.h_bits,
+                   flavor=fmt.flavor.value, **kw)
 
 
 class F2PSketch:

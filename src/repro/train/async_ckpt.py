@@ -20,10 +20,12 @@ from repro.train import checkpoint
 
 
 class AsyncCheckpointer:
-    def __init__(self, ckpt_dir: str, *, keep: int = 3, compress: bool = True):
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, compress: bool = True,
+                 policy=None):
         self.dir = ckpt_dir
         self.keep = keep
         self.compress = compress
+        self.policy = policy   # FormatPolicy | None: per-leaf ckpt formats
         self._lock = threading.Condition()
         self._pending: tuple[int, Any] | None = None
         self._busy = False
@@ -51,7 +53,7 @@ class AsyncCheckpointer:
                 self._busy = True
             try:
                 checkpoint.save(self.dir, step, host, keep=self.keep,
-                                compress=self.compress)
+                                compress=self.compress, policy=self.policy)
             except Exception as e:  # surfaced on wait()
                 self._errors.append(e)
             finally:

@@ -54,21 +54,30 @@ def _flatten(tree):
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}, treedef
 
 
-def _codec_shrinks(arr: np.ndarray, block: int) -> bool:
-    """Would F2P16 codes+scales actually be smaller than the raw bytes?
-    Narrow-last-dim leaves (e.g. [N, 1]: 2B code + 4B scale per element vs
-    4B raw) expand under the codec and must stay raw."""
+def _codec_shrinks(arr: np.ndarray, block: int,
+                   fmt: F2PFormat = CKPT_FMT) -> bool:
+    """Would the codec's codes+scales actually be smaller than the raw
+    bytes? Narrow-last-dim leaves (e.g. [N, 1]: 2B code + 4B scale per
+    element vs 4B raw) expand under the codec and must stay raw."""
     blk = min(block, arr.shape[-1])
     npad = -(-arr.shape[-1] // blk) * blk
     lead = arr.size // arr.shape[-1]
-    compressed = lead * (npad * np.dtype(CKPT_FMT.code_dtype).itemsize
+    compressed = lead * (npad * np.dtype(fmt.code_dtype).itemsize
                          + (npad // blk) * 4)
     return compressed < arr.nbytes
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
-         keep: int = 3, block: int = 128, min_size: int = 65536) -> str:
-    """Atomically write `tree` as step_<step>; prune to `keep` newest."""
+         keep: int = 3, block: int = 128, min_size: int = 65536,
+         fmt: F2PFormat = CKPT_FMT, policy=None) -> str:
+    """Atomically write `tree` as step_<step>; prune to `keep` newest.
+
+    ``policy`` (repro.autotune.policy.FormatPolicy | None) does two things:
+    it picks the compression format per leaf (rule paths are
+    ``ckpt/<leaf path>``; per-leaf format descriptors were already stored in
+    the index, so restore needs nothing new) and it is round-tripped as
+    ``policy.json`` inside the step dir — ``load_policy`` recovers it, so a
+    restart resumes with the exact formats the run had solved for."""
     flat, _ = _flatten(tree)
     # leaves belonging to a QTensor are ALREADY a compressed wire format —
     # re-compressing the f32 scales leaf would be lossy-on-lossy and break
@@ -89,18 +98,24 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
         for name, leaf in flat.items():
             arr = np.asarray(leaf)
             entry = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            leaf_fmt, leaf_blk = fmt, block
+            if policy is not None:
+                from repro.autotune.policy import path_from_keystr
+
+                leaf_fmt, leaf_blk = policy.f2p_for(
+                    "ckpt/" + path_from_keystr(name), (fmt, block))
             if (compress and arr.dtype.kind == "f" and arr.size >= min_size
                     and arr.shape and id(leaf) not in qt_children
-                    and _codec_shrinks(arr, block)):
+                    and _codec_shrinks(arr, leaf_blk, leaf_fmt)):
                 # cap the block at the leaf's last dim: a 128-block on a
                 # narrow leaf would PAD codes up to 128 and balloon the file
-                leaf_block = min(block, arr.shape[-1])
-                qt = QT.quantize(jnp.asarray(arr, jnp.float32), CKPT_FMT,
+                leaf_block = min(leaf_blk, arr.shape[-1])
+                qt = QT.quantize(jnp.asarray(arr, jnp.float32), leaf_fmt,
                                  block=leaf_block, backend="xla")
                 payload = np.asarray(qt.codes).tobytes()
                 scales = np.asarray(qt.scales).tobytes()
                 entry.update(codec="qtensor", block=leaf_block,
-                             fmt=_fmt_meta(CKPT_FMT),
+                             fmt=_fmt_meta(leaf_fmt),
                              codes_shape=list(qt.codes.shape),
                              scale_shape=list(qt.scales.shape))
                 entry["offset"], entry["nbytes"] = f.tell(), len(payload)
@@ -115,6 +130,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
             index[name] = entry
     with open(os.path.join(tmp, "index.json"), "w") as f:
         json.dump({"step": step, "leaves": index}, f)
+    if policy is not None:
+        with open(os.path.join(tmp, "policy.json"), "w") as f:
+            f.write(policy.to_json())
     with open(os.path.join(tmp, "COMMITTED"), "w") as f:
         f.write("ok")
     if os.path.exists(final):
@@ -144,6 +162,22 @@ def all_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str):
     steps = all_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def load_policy(ckpt_dir: str, step: int | None = None):
+    """The FormatPolicy saved alongside step ``step`` (default: latest), or
+    None when the checkpoint was written without one."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None
+    p = os.path.join(ckpt_dir, f"step_{step}", "policy.json")
+    if not os.path.exists(p):
+        return None
+    from repro.autotune.policy import FormatPolicy
+
+    with open(p) as f:
+        return FormatPolicy.from_json(f.read())
 
 
 def _read_qtensor(e: dict, data: np.memmap) -> QTensor:

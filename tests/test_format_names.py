@@ -1,0 +1,73 @@
+"""Property tests: format names round-trip through the parser.
+
+``named_format(format_name(f)) == f`` for every representable format, and
+every ``str()`` spelling a format emits parses back to an equal format —
+the satellite fix for baseline spellings ('INT8s', '10M5Eu') that used to
+fail ``named_format``.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to a deterministic example sweep
+    from _hypofallback import given, settings, st
+
+from repro.core.f2p import F2PFormat, Flavor
+from repro.core.formats import (FPFormat, IntFormat, SEADFormat, bf16,
+                                format_bits, format_name, fp16, named_format,
+                                tf32)
+
+
+def _all_formats():
+    out = []
+    for signed in (False, True):
+        out += [IntFormat(n, signed) for n in (4, 8, 12, 16)]
+        out += [SEADFormat(n, signed) for n in (6, 8, 16)]
+        out += [FPFormat(m, e, signed) for m, e in
+                ((3, 4), (4, 3), (10, 5), (7, 8), (10, 8), (2, 2))]
+        for n in (6, 8, 12, 16, 19):
+            for h in (1, 2, 3):
+                for fl in Flavor:
+                    try:
+                        out.append(F2PFormat(n, h, fl, signed))
+                    except ValueError:
+                        continue
+    return out
+
+
+FORMATS = _all_formats()
+
+
+@settings(max_examples=60, deadline=None)
+@given(fmt=st.sampled_from(FORMATS))
+def test_format_name_roundtrip(fmt):
+    assert named_format(format_name(fmt)) == fmt
+
+
+@settings(max_examples=60, deadline=None)
+@given(fmt=st.sampled_from(FORMATS))
+def test_str_spelling_parses(fmt):
+    assert named_format(str(fmt)) == fmt
+
+
+@settings(max_examples=40, deadline=None)
+@given(fmt=st.sampled_from(FORMATS))
+def test_format_bits_matches_grid(fmt):
+    # bits must cover the grid: 2^bits >= number of representable values
+    assert (1 << format_bits(fmt)) >= len(fmt.grid)
+
+
+def test_aliases_and_legacy_signed_arg():
+    assert named_format("fp16", signed=True) == fp16(True)
+    assert named_format("bf16") == bf16(False)
+    assert named_format("tf32s") == tf32(True)
+    # explicit suffix wins over the signed argument
+    assert named_format("int8u", signed=True) == IntFormat(8, signed=False)
+    assert named_format("f2p_sr_2_8s", signed=False) == F2PFormat(
+        8, 2, Flavor.SR, signed=True)
+
+
+def test_unknown_name_raises():
+    for bad in ("float32", "f2p_xx_2_8", "int", "m5e", ""):
+        with pytest.raises(ValueError):
+            named_format(bad)
