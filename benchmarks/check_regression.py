@@ -44,8 +44,13 @@ DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # metric-key suffix -> direction ("low" = lower is better)
 _SUFFIXES = {"_us": "low", "_per_s": "high"}
 
-# single-rep table jobs: trajectory-recorded, never gated (see module doc)
-_UNGATED_PREFIXES = ("table5_us", "table6_us")
+# trajectory-recorded, never gated (see module doc): the single-rep table
+# jobs, and the serve decode loop — a host-side Python generate loop over a
+# tiny model whose per-token time swings ~5x on shared boxes (measured
+# 1.26-5.97 ms/token on unmodified code; DESIGN.md §9.4), far past any sane
+# threshold. The kernel/matmul/packed metrics stay gated: they are single
+# jitted calls whose medians hold within the 2.5x bar.
+_UNGATED_PREFIXES = ("table5_us", "table6_us", "serve.")
 
 
 def flatten_metrics(entry: dict) -> dict[str, tuple[float, str]]:

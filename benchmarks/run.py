@@ -140,10 +140,15 @@ def bench_kernels(quick=False, warmup=1, reps=3):
         q_us, qt = timeit(ops.f2p_quantize, x, fmt, backend=b,
                           warmup=warmup, reps=reps)
         dq_us, _ = timeit(qt.dequantize, backend=b, warmup=warmup, reps=reps)
+        # effective GB/s: logical f32 bytes the codec consumes/produces per
+        # wall second (compression-independent numerator — comparable
+        # across packed/unpacked variants)
         print(f"quantize_{b}_256x1024,{q_us:.0f},gbps={nbytes/q_us/1e3:.2f}")
         print(f"dequantize_{b}_256x1024,{dq_us:.0f},"
               f"gbps={nbytes/dq_us/1e3:.2f}")
-        out[b] = {"quantize_us": q_us, "dequantize_us": dq_us}
+        out[b] = {"quantize_us": q_us, "dequantize_us": dq_us,
+                  "quantize_gbps": nbytes / q_us / 1e3,
+                  "dequantize_gbps": nbytes / dq_us / 1e3}
 
     # decode variants head-to-head on the xla backend (LUT vs bit math)
     codes = ops.f2p_quantize(x, fmt, backend="xla").codes
@@ -219,6 +224,138 @@ def bench_sketch(quick=False, warmup=1, reps=3):
     print(f"sketch_on_arrival_mse,{dev_mse*1000:.1f},vs_oracle={ratio:.2f}x")
     out["on_arrival"] = {"device_mse": dev_mse, "oracle_mse": oracle_mse,
                          "n_arrivals": n_arrivals, "cells": cells}
+    return out
+
+
+def bench_packed(quick=False, warmup=1, reps=3):
+    """Bit-packed storage primitives (DESIGN.md §9): pack/unpack throughput
+    and the fused packed codec vs the byte-aligned one, plus the honest
+    nbytes ratio (the ISSUE-5 acceptance: <= 0.80x at 6-bit)."""
+    import jax.numpy as jnp
+
+    from repro.core.f2p import F2PFormat, Flavor
+    from repro.core import qtensor as QT
+    from repro.kernels.bits import pack_bits_jit, unpack_bits_jit
+
+    shape = (256, 1024) if quick else (1024, 1024)
+    n = shape[0] * shape[1]
+    nbytes = n * 4  # logical f32 bytes (GB/s numerator, see bench_kernels)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=shape).astype(np.float32))
+    out = {"shape": list(shape)}
+
+    for nbits in (6, 8, 12):
+        fmt = F2PFormat(nbits, 2, Flavor.SR, signed=True)
+        qt = QT.quantize(x, fmt, backend="xla")
+        p_us, words = timeit(pack_bits_jit, qt.codes, nbits,
+                             warmup=warmup, reps=reps)
+        u_us, codes = timeit(unpack_bits_jit, words, nbits,
+                             qt.codes.shape[-1], warmup=warmup, reps=reps)
+        assert (np.asarray(codes, qt.codes.dtype)
+                == np.asarray(qt.codes)).all(), "pack/unpack round-trip"
+        qp_us, qp = timeit(QT.quantize, x, fmt, backend="xla", packed=True,
+                           warmup=warmup, reps=reps)
+        dqp_us, _ = timeit(qp.dequantize, backend="xla",
+                           warmup=warmup, reps=reps)
+        ratio = qp.nbytes / qt.nbytes
+        print(f"pack_{nbits}b,{p_us:.0f},gbps={nbytes/p_us/1e3:.2f}")
+        print(f"unpack_{nbits}b,{u_us:.0f},gbps={nbytes/u_us/1e3:.2f}")
+        print(f"quantize_packed_{nbits}b,{qp_us:.0f},"
+              f"gbps={nbytes/qp_us/1e3:.2f}")
+        print(f"dequantize_packed_{nbits}b,{dqp_us:.0f},"
+              f"nbytes_ratio={ratio:.3f}")
+        out[str(nbits)] = {
+            "pack_us": p_us, "unpack_us": u_us,
+            "quantize_packed_us": qp_us, "dequantize_packed_us": dqp_us,
+            "pack_gbps": nbytes / p_us / 1e3,
+            "unpack_gbps": nbytes / u_us / 1e3,
+            "quantize_packed_gbps": nbytes / qp_us / 1e3,
+            "dequantize_packed_gbps": nbytes / dqp_us / 1e3,
+            "nbytes_ratio": ratio,
+        }
+    return out
+
+
+def bench_matmul(quick=False, warmup=1, reps=3):
+    """Fused dequant-matmul: byte-aligned uint8 weight stream vs bit-packed
+    word stream. Effective GB/s uses the logical f32 bytes of x, W and out
+    (same numerator for every variant — a pure speed metric in bandwidth
+    units), so packed-vs-u8 differences are wall-clock differences."""
+    import jax.numpy as jnp
+
+    from repro.core.f2p import F2PFormat, Flavor
+    from repro.kernels import dispatch
+    from repro.kernels import f2p_matmul as MM
+
+    M, K, N = (128, 1024, 1024) if quick else (256, 2048, 2048)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    logical = (M * K + K * N + M * N) * 4
+    out = {"mkn": [M, K, N]}
+
+    backends = ["xla"]
+    if dispatch.pallas_variant() == dispatch.PALLAS:
+        backends.append("pallas")
+    for b in backends:
+        res = {}
+        for name, nbits, packed in (("u8", 8, False), ("packed8", 8, True),
+                                    ("packed6", 6, True)):
+            fmt = F2PFormat(nbits, 2, Flavor.SR, signed=True)
+            codes, scales = MM.quantize_weight(w, fmt, packed=packed)
+            us, _ = timeit(MM.dequant_matmul, x, codes, scales, fmt=fmt,
+                           backend=b, packed=packed, warmup=warmup, reps=reps)
+            gbps = logical / us / 1e3
+            stream_b = codes.size * codes.dtype.itemsize
+            print(f"dequant_matmul_{name}_{b},{us:.0f},eff_gbps={gbps:.2f}"
+                  f"/wstream_mb={stream_b/1e6:.2f}")
+            res[f"{name}_us"] = us
+            res[f"{name}_eff_gbps"] = gbps
+            res[f"{name}_weight_stream_bytes"] = stream_b
+        out[b] = res
+    return out
+
+
+def bench_serve(quick=False, warmup=1, reps=3):
+    """Serving engine decode loop: steady-state us/token with the cache
+    buffers donated to the jitted step (the default — in-place KV updates)
+    vs undonated (a fresh cache allocation every token), on the quantized
+    KV cache. Effective GB/s counts the logical bytes a decode step streams
+    (params + the full KV cache the attention reads)."""
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = smoke_config("llama3_2_3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    max_seq = 64
+    max_new = 12 if quick else 24
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size))
+    p_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    out = {"max_new": max_new}
+    for name, donate in (("donate", True), ("nodonate", False)):
+        scfg = ServeConfig(batch=B, max_seq=max_seq, quantized_kv=True,
+                           donate_caches=donate)
+        eng = Engine(cfg, scfg, params)
+
+        def gen():
+            return eng.generate(prompts, max_new)
+
+        us, toks = timeit(gen, warmup=max(warmup, 1), reps=reps)
+        per_tok = us / toks.shape[1]
+        kv_bytes = 0
+        from repro.models import init_caches
+        for leaf in jax.tree.leaves(init_caches(cfg, B, max_seq,
+                                                quantized_kv=True)):
+            kv_bytes += leaf.size * leaf.dtype.itemsize
+        gbps = (p_bytes + kv_bytes) / per_tok / 1e3
+        print(f"serve_decode_{name},{per_tok:.0f},eff_gbps={gbps:.2f}")
+        out[name] = {"decode_per_tok_us": per_tok, "eff_gbps": gbps,
+                     "generate_us": us}
     return out
 
 
@@ -381,6 +518,9 @@ BENCHES = {
     "fig1": bench_fig1,
     "host_encode": bench_host_encode,
     "kernels": bench_kernels,
+    "packed": bench_packed,
+    "matmul": bench_matmul,
+    "serve": bench_serve,
     "sketch": bench_sketch,
     "compression": bench_compression,
     "kv_quality": bench_kv_quality,
@@ -399,6 +539,9 @@ def _append_trajectory(results: dict, args) -> None:
         "reps": args.reps,
         "host_encode": results.get("host_encode"),
         "kernels": results.get("kernels"),
+        "packed": results.get("packed"),
+        "matmul": results.get("matmul"),
+        "serve": results.get("serve"),
         "sketch": results.get("sketch"),
         "fl": results.get("fl"),
         "autotune": results.get("autotune"),
@@ -447,7 +590,8 @@ def main() -> None:
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
-    if {"host_encode", "kernels", "sketch", "fl", "autotune"} & set(names):
+    if {"host_encode", "kernels", "packed", "matmul", "serve", "sketch",
+            "fl", "autotune"} & set(names):
         _append_trajectory(results, args)
 
 

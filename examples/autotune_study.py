@@ -9,13 +9,19 @@ is what this subsystem retires — see DESIGN.md §8):
      hyper-exponent only when the range demands it).
   2. POLICY vs BEST SINGLE FORMAT — real FL delta tensors + real KV-cache
      tensors, calibrated per leaf; ``solve()`` allocates formats under the
-     same bit budget a uniform 8-bit format spends (PACKED-bit accounting:
-     logical format widths; this repo's containers byte-align codes, so
-     part 3 is the separate byte-equal comparison). Acceptance: the policy
-     beats the BEST single hardcoded format on combined quantization MSE.
+     same bit budget a uniform 8-bit format spends. PACKED-bit accounting
+     is now the MEASURED default, not a fiction: since ISSUE 5 every
+     container can store codes bit-packed (``packed=True`` /
+     ``F2P_PACKED=1``, DESIGN.md §9), so ``_leaf_bits(bits_mode='packed')``
+     reports the word-granular bytes those buffers really occupy — a 6-bit
+     rule the solver hands out genuinely costs 6 bits/elem on the wire and
+     on disk. Acceptance: the policy beats the BEST single hardcoded
+     format on combined quantization MSE.
   3. FL ROUND TRADE-OFF — fed-avg with the policy re-solved every K rounds
      from delta histograms vs PR 3's fixed ``f2p_sr_2_8``. Acceptance:
-     matches or beats the fixed format's wire-bytes/loss trade-off.
+     matches or beats the fixed format's wire-bytes/loss trade-off. (The
+     byte-CUTTING packed policy — reduced budget, mixed 6/8 — lives in
+     examples/fed_avg.py.)
 
     PYTHONPATH=src python examples/autotune_study.py [--quick]
 """

@@ -1,18 +1,23 @@
 """Federated averaging with F2P8-quantized client updates (paper's FL claim).
 
-Runs the same fed-avg simulation twice on the toy LM — clients shipping raw
-f32 deltas vs F2P8 QTensor deltas (codes + per-block scales, error
-feedback) — and reports the wire-byte reduction and final-loss ratio.
+Runs the fed-avg simulation three ways on the toy LM — clients shipping raw
+f32 deltas, F2P8 QTensor deltas (codes + per-block scales, error feedback),
+and bit-packed deltas under an autotuned mixed 6/8-bit policy — and reports
+the wire-byte reductions and final-loss ratios.
 
     PYTHONPATH=src python examples/fed_avg.py [--rounds 5] [--clients 4]
 
 Expected on CPU: ~3.9x fewer wire bytes per round at <= 1.05x the f32 final
-loss (the acceptance bar this repo's CI smoke test enforces).
+loss for the fixed F2P8 run, and a further >= 20% wire drop at <= 1.001x the
+F2P8 loss for the packed mixed policy (the acceptance bars this repo's CI
+smoke test enforces). The packed run is where ISSUE 5 cashes in: with
+``ClientConfig(packed=True)`` a 6-bit policy leaf really costs 6 bits on the
+wire (DESIGN.md §9), so the autotuner can trade width for bytes instead of
+just moving representable points around inside a fixed byte budget.
 
-The F2P8 format here is the hand-picked default; pass
-``FedAvgConfig(autotune=AutotuneConfig())`` to have the per-leaf formats
-re-solved from calibrated delta histograms instead (same wire bytes,
-equal-or-better loss — see examples/autotune_study.py part 3).
+Set ``F2P_PACKED=1`` to flip every ``packed=None`` default in the repo (the
+CI smoke job does) — the f2p8 run then also ships packed (byte-identical for
+8-bit: 4 codes per uint32 word).
 """
 import argparse
 import os
@@ -20,7 +25,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.fl import ClientConfig, FedAvgConfig, run_fed_avg, toy_task
+from repro.fl import (AutotuneConfig, ClientConfig, FedAvgConfig, run_fed_avg,
+                      toy_task)
 
 
 def main():
@@ -29,33 +35,52 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--packed-budget", type=float, default=6.5,
+                    help="bits/elem budget of the packed mixed 6/8 policy")
     args = ap.parse_args()
 
     task = toy_task()
+    configs = {
+        "f32": (ClientConfig(local_steps=args.local_steps, lr=args.lr,
+                             compress=False), None),
+        "f2p8": (ClientConfig(local_steps=args.local_steps, lr=args.lr,
+                              compress=True), None),
+        # packed wire + mixed-width policy re-solved from delta histograms:
+        # 6-bit where the error model says it is free, 8-bit elsewhere
+        "f2p packed-mixed": (
+            ClientConfig(local_steps=args.local_steps, lr=args.lr,
+                         compress=True, packed=True),
+            AutotuneConfig(every=2, n_bits=(6, 8),
+                           budget_bits_per_elem=args.packed_budget)),
+    }
     runs = {}
-    for name, compress in (("f32", False), ("f2p8", True)):
-        ccfg = ClientConfig(local_steps=args.local_steps, lr=args.lr,
-                            compress=compress)
+    for name, (ccfg, at) in configs.items():
         fcfg = FedAvgConfig(n_clients=args.clients, rounds=args.rounds,
-                            client=ccfg)
+                            client=ccfg, autotune=at)
         print(f"--- {name} client updates "
               f"({args.clients} clients x {args.rounds} rounds x "
               f"{args.local_steps} local steps) ---")
         runs[name] = run_fed_avg(fcfg, task, verbose=True)
 
-    wire_f32 = runs["f32"]["wire_bytes_per_round"][-1]
-    wire_q = runs["f2p8"]["wire_bytes_per_round"][-1]
-    loss_f32 = runs["f32"]["eval_loss"][-1]
-    loss_q = runs["f2p8"]["eval_loss"][-1]
+    wire = {k: r["wire_bytes_per_round"][-1] for k, r in runs.items()}
+    loss = {k: r["eval_loss"][-1] for k, r in runs.items()}
     print("\nsummary:")
-    print(f"  wire bytes/round: f32 {wire_f32/1e6:.2f} MB -> "
-          f"f2p8 {wire_q/1e6:.2f} MB ({wire_f32/wire_q:.2f}x reduction)")
-    print(f"  final eval loss:  f32 {loss_f32:.4f} vs f2p8 {loss_q:.4f} "
-          f"({loss_q/loss_f32:.3f}x)")
-    ok = wire_f32 / wire_q >= 3.5 and loss_q <= 1.05 * loss_f32
+    print(f"  wire bytes/round: f32 {wire['f32']/1e6:.2f} MB -> "
+          f"f2p8 {wire['f2p8']/1e6:.2f} MB "
+          f"({wire['f32']/wire['f2p8']:.2f}x reduction)")
+    print(f"  final eval loss:  f32 {loss['f32']:.4f} vs f2p8 "
+          f"{loss['f2p8']:.4f} ({loss['f2p8']/loss['f32']:.3f}x)")
+    packed_drop = 1.0 - wire["f2p packed-mixed"] / wire["f2p8"]
+    packed_loss = loss["f2p packed-mixed"] / loss["f2p8"]
+    print(f"  packed mixed policy: wire {wire['f2p packed-mixed']/1e6:.2f} MB "
+          f"({packed_drop:.1%} below f2p8) at {packed_loss:.4f}x f2p8 loss")
+    ok = wire["f32"] / wire["f2p8"] >= 3.5 and loss["f2p8"] <= 1.05 * loss["f32"]
+    ok_packed = packed_drop >= 0.20 and packed_loss <= 1.001
     print(f"  acceptance (>=3.5x wire, <=1.05x loss): "
           f"{'PASS' if ok else 'FAIL'}")
-    return 0 if ok else 1
+    print(f"  acceptance (packed: >=20% wire drop, <=1.001x f2p8 loss): "
+          f"{'PASS' if ok_packed else 'FAIL'}")
+    return 0 if ok and ok_packed else 1
 
 
 if __name__ == "__main__":

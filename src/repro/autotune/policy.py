@@ -230,21 +230,28 @@ def _leaf_bits(spec: LeafSpec, fmt_name: str, block: int,
                bits_mode: str = "packed") -> float:
     """Total bits of the codes + per-block f32 scales for this leaf.
 
-    ``bits_mode``: 'packed' charges the format's logical width (an 8.25
-    bits/elem budget can trade a 6-bit leaf against a 10-bit one — the
-    information-theoretic accounting the study/benchmarks use); 'storage'
-    charges the code dtype this repo actually serializes (byte-aligned:
-    a 10-bit format stores as uint16 = 16 bits) — use it when the budget
-    must bound real checkpoint/wire BYTES."""
+    ``bits_mode``: 'packed' charges what the bit-packed containers really
+    store — per-row word-granular bytes from the ONE canonical
+    ``kernels.bits.packed_nbytes`` formula (since ISSUE 5 this is no longer
+    an accounting fiction: ``quantize(packed=True)`` buffers, the FL wire
+    and packed checkpoints all cost exactly this); 'storage' charges the
+    byte-aligned code dtype unpacked containers serialize (a 10-bit format
+    stores as uint16 = 16 bits) — use it when the budget must bound
+    UNPACKED checkpoint/wire bytes."""
+    from repro.kernels.bits import packed_nbytes
+
     fmt = named_format(fmt_name)
+    blk = spec.block_for(block)
+    rows = spec.size // spec.last_dim
+    npad = -(-spec.last_dim // blk) * blk
+    nblocks = (npad // blk) * rows
     if bits_mode == "storage":
         fbits = 8 * np.dtype(fmt.code_dtype).itemsize if hasattr(
             fmt, "code_dtype") else 8 * -(-format_bits(fmt) // 8)
+        code_bits = float(spec.size * fbits)
     else:
-        fbits = format_bits(fmt)
-    blk = spec.block_for(block)
-    nblocks = -(-spec.last_dim // blk) * (spec.size // spec.last_dim)
-    return spec.size * fbits + 32.0 * nblocks
+        code_bits = 8.0 * rows * packed_nbytes(npad, format_bits(fmt))
+    return code_bits + 32.0 * nblocks
 
 
 def solve(leaves: Sequence[LeafSpec], candidates: Sequence[str],

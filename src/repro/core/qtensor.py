@@ -24,18 +24,47 @@ with the block count. Leading dims are never merged on the trace path —
 reshaping sharded leading dims would force GSPMD to all-gather the full f32
 tensor just to reflow it, so every leading-dim sharding survives quantization
 (the property ``optim.compress`` and the KV cache rely on).
+
+Packed storage (DESIGN.md §9): with ``packed=True`` the codes leaf holds
+little-endian uint32 words instead of byte-aligned code elements — each
+last-axis row of ``npad`` codes packs densely into
+``kernels.bits.packed_words(npad, n_bits)`` words, so a 6-bit format really
+costs 6 bits/elem on HBM, on the wire, and on disk. The flag is static aux
+(it hashes into the jit cache key next to the format), rows never share
+words (leading-axis ``dynamic_update``/``all_gather`` stay word-aligned),
+and ``pack()``/``unpack()`` are exact bitwise inverses. ``quantize(...,
+packed=True)`` and ``dequantize`` of a packed QTensor route through the
+fused ``quantize_packed``/``dequantize_packed`` dispatch ops — consumers
+never see a host-side repack.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.f2p import F2PFormat
+from repro.kernels.bits import packed_nbytes, packed_words
 
 __all__ = ["QTensor", "quantize", "dequantize", "block_scales",
-           "quantize_tree", "dequantize_tree"]
+           "quantize_tree", "dequantize_tree", "packed_default",
+           "resolve_packed"]
+
+
+def packed_default() -> bool:
+    """Process-wide packed-storage default: the ``F2P_PACKED`` env var
+    ("1"/"true"/"on" enables). The config equivalent every ``packed=None``
+    dataclass field resolves through — CI flips it to run the whole example
+    suite end-to-end on the packed path."""
+    return os.environ.get("F2P_PACKED", "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
+def resolve_packed(packed) -> bool:
+    """``None`` -> the :func:`packed_default` env policy; else ``bool``."""
+    return packed_default() if packed is None else bool(packed)
 
 
 def block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str = "f32"):
@@ -64,27 +93,45 @@ class QTensor:
     ``codes``/``scales`` may legitimately differ from ``shape[:-1]`` while a
     transform is restructuring them (scan stacking, broadcast_to over a group
     axis, vmap) — ``logical_shape`` re-derives the effective shape from the
-    live leaves so ``dequantize`` stays correct either way."""
+    live leaves so ``dequantize`` stays correct either way.
 
-    __slots__ = ("codes", "scales", "fmt", "block", "shape")
+    ``packed`` (static aux): codes leaf holds per-row little-endian uint32
+    words (``kernels.bits`` layout) instead of byte-aligned code elements."""
 
-    def __init__(self, codes, scales, fmt: F2PFormat, block: int, shape):
+    __slots__ = ("codes", "scales", "fmt", "block", "shape", "packed")
+
+    def __init__(self, codes, scales, fmt: F2PFormat, block: int, shape,
+                 packed: bool = False):
         self.codes, self.scales = codes, scales
         self.fmt, self.block, self.shape = fmt, int(block), tuple(shape)
+        self.packed = bool(packed)
 
     # ---- construction ------------------------------------------------------
     @classmethod
     def from_parts(cls, codes, scales, fmt: F2PFormat, block: int,
-                   shape) -> "QTensor":
+                   shape, packed: bool = False) -> "QTensor":
         """Zero-copy reassembly (wire receive, checkpoint restore).
 
         Validates the leaf shapes against the declared logical shape — a
-        mismatched wire payload fails loudly here instead of broadcasting."""
+        mismatched wire payload fails loudly here instead of broadcasting.
+        Packed buffers must be word-aligned: the codes leaf carries exactly
+        ``packed_words(npad, n_bits)`` uint32 words per row."""
         shape = tuple(shape)
         block = int(block)
+        packed = bool(packed)
         n = shape[-1]
         npad = -(-n // block) * block
-        if codes.shape[-1] != npad:
+        if packed:
+            nw = packed_words(npad, fmt.n_bits)
+            if codes.shape[-1] != nw:
+                raise ValueError(
+                    f"packed codes last dim {codes.shape[-1]} != "
+                    f"{nw} uint32 words for {npad} {fmt.n_bits}-bit fields "
+                    f"(shape {shape}, block {block})")
+            if jnp.dtype(codes.dtype) != jnp.dtype(jnp.uint32):
+                raise ValueError(
+                    f"packed codes must be uint32 words, got {codes.dtype}")
+        elif codes.shape[-1] != npad:
             raise ValueError(
                 f"codes last dim {codes.shape[-1]} != padded logical dim "
                 f"{npad} (shape {shape}, block {block})")
@@ -96,11 +143,12 @@ class QTensor:
             raise ValueError(
                 f"codes/scales leading dims disagree: {codes.shape} vs "
                 f"{scales.shape}")
-        return cls(codes, scales, fmt, block, shape)
+        return cls(codes, scales, fmt, block, shape, packed)
 
     # ---- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (self.codes, self.scales), (self.fmt, self.block, self.shape)
+        return (self.codes, self.scales), (self.fmt, self.block, self.shape,
+                                           self.packed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -119,13 +167,50 @@ class QTensor:
         return self.scales.shape[-1]
 
     @property
+    def npad(self) -> int:
+        """Logical last dim padded up to the block multiple."""
+        return -(-self.shape[-1] // self.block) * self.block
+
+    @property
     def nbytes(self) -> int:
-        """Wire/storage footprint of the compressed representation."""
-        return (self.codes.size * self.codes.dtype.itemsize
-                + self.scales.size * self.scales.dtype.itemsize)
+        """Wire/storage footprint of the compressed representation. Honest
+        about packing: a packed 6-bit leaf reports 6 bits/elem (word
+        granular — the canonical ``kernels.bits.packed_nbytes`` formula),
+        not the 8 its unpacked uint8 container would round up to."""
+        if self.packed:
+            rows = self.codes.size // self.codes.shape[-1]
+            code_bytes = rows * packed_nbytes(self.npad, self.fmt.n_bits)
+        else:
+            code_bytes = self.codes.size * self.codes.dtype.itemsize
+        return code_bytes + self.scales.size * self.scales.dtype.itemsize
 
     def dequantize(self, dtype=jnp.float32, backend: str | None = None):
         return dequantize(self, dtype=dtype, backend=backend)
+
+    def pack(self, backend: str | None = None) -> "QTensor":
+        """Packed twin of this QTensor (no-op when already packed)."""
+        if self.packed:
+            return self
+        from repro.kernels.bits import pack_bits_jit
+
+        del backend  # pack is pure bit movement; one fused jit path
+        words = pack_bits_jit(self.codes, self.fmt.n_bits)
+        return QTensor(words, self.scales, self.fmt, self.block, self.shape,
+                       packed=True)
+
+    def unpack(self, backend: str | None = None) -> "QTensor":
+        """Byte-aligned twin of this QTensor (no-op when already unpacked).
+        Bitwise inverse of :meth:`pack` — codes round-trip exactly."""
+        if not self.packed:
+            return self
+        from repro.kernels.bits import unpack_bits_jit
+
+        del backend
+        npad = self.npad
+        codes = unpack_bits_jit(self.codes, self.fmt.n_bits, npad).astype(
+            jnp.dtype(self.fmt.code_dtype))
+        return QTensor(codes, self.scales, self.fmt, self.block, self.shape,
+                       packed=False)
 
     def scale_by(self, factor) -> "QTensor":
         """Fold a multiplicative factor (mean weight, lr) into the scales —
@@ -133,25 +218,31 @@ class QTensor:
         used by ``compressed_psum`` and the FL server)."""
         return QTensor(self.codes,
                        self.scales * jnp.asarray(factor, jnp.float32),
-                       self.fmt, self.block, self.shape)
+                       self.fmt, self.block, self.shape, self.packed)
 
     def dynamic_update(self, other: "QTensor", start, axis: int) -> "QTensor":
         """In-place-style update of a leading-axis slice (KV-cache writes):
-        both leaves are updated coherently at ``start`` along ``axis``."""
-        if (other.fmt, other.block) != (self.fmt, self.block):
-            raise ValueError(f"format mismatch: {other.fmt}/{other.block} "
-                             f"into {self.fmt}/{self.block}")
+        both leaves are updated coherently at ``start`` along ``axis``.
+        Packed caches accept packed slabs only — rows never share words, so
+        a leading-axis slab write is word-aligned by construction."""
+        if (other.fmt, other.block, other.packed) != (self.fmt, self.block,
+                                                      self.packed):
+            raise ValueError(
+                f"format mismatch: {other.fmt}/{other.block}"
+                f"/packed={other.packed} into {self.fmt}/{self.block}"
+                f"/packed={self.packed}")
         ax = axis % self.codes.ndim
         if ax == self.codes.ndim - 1:
             raise ValueError("cannot dynamic_update along the blocked axis")
         upd = jax.lax.dynamic_update_slice_in_dim
         return QTensor(upd(self.codes, other.codes, start, ax),
                        upd(self.scales, other.scales, start, ax),
-                       self.fmt, self.block, self.shape)
+                       self.fmt, self.block, self.shape, self.packed)
 
     def __repr__(self):
         return (f"QTensor({self.logical_shape}, fmt={self.fmt}, "
-                f"block={self.block})")
+                f"block={self.block}"
+                f"{', packed' if self.packed else ''})")
 
 
 # ---------------------------------------------------------------------------
@@ -188,8 +279,30 @@ def _dequantize_xla_nd(codes, scales, fmt: F2PFormat, block: int):
     return vb.reshape(vals.shape)
 
 
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def _quantize_packed_xla_nd(x32, fmt: F2PFormat, block: int, scale_mode: str):
+    """Shape-preserving fused encode + in-trace bit pack (one XLA program —
+    the byte-aligned codes tensor never materializes outside registers)."""
+    from repro.kernels.bits import pack_bits
+
+    codes, scales = _quantize_xla_nd(x32, fmt, block, scale_mode)
+    return pack_bits(codes, fmt.n_bits), scales
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def _dequantize_packed_xla_nd(words, scales, fmt: F2PFormat, block: int):
+    """Fused unpack -> decode -> scale (npad derives from the scales leaf,
+    so no extra static argument)."""
+    from repro.kernels.bits import unpack_bits
+
+    npad = scales.shape[-1] * block
+    codes = unpack_bits(words, fmt.n_bits, npad).astype(jnp.int32)
+    return _dequantize_xla_nd(codes, scales, fmt, block)
+
+
 def quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
-             scale_mode: str = "f32", backend: str | None = None) -> QTensor:
+             scale_mode: str = "f32", backend: str | None = None,
+             packed: bool = False) -> QTensor:
     """Blockwise absmax-scaled F2P quantization of any-rank ``x`` along its
     last axis. Returns a :class:`QTensor`.
 
@@ -197,42 +310,59 @@ def quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
     shape-preserving tile math — leading dims are NEVER merged, so sharded
     leading axes keep their shardings under jit/shard_map. The Pallas paths
     collapse to the kernels' 2D tile layout (host/TPU entry points) and
-    produce bitwise-identical codes and scales."""
+    produce bitwise-identical codes and scales.
+
+    ``packed=True`` routes the ``quantize_packed`` dispatch op: the encode
+    and the bit pack fuse into one program, and the returned QTensor's codes
+    leaf is uint32 words (bitwise-identical to ``quantize(...).pack()``)."""
     from repro.kernels import dispatch
     from repro.kernels import f2p_quant as K  # noqa: F401 (registers backends)
 
+    op = "quantize_packed" if packed else "quantize"
     shape = x.shape
-    b = dispatch.resolve_backend(backend, op="quantize")
+    b = dispatch.resolve_backend(backend, op=op)
     x32 = _pad_last(x.astype(jnp.float32), block)
     if b == dispatch.XLA:
-        codes, scales = _quantize_xla_nd(x32, fmt, block, scale_mode)
-        return QTensor(codes, scales, fmt, block, shape)
+        if packed:
+            codes, scales = _quantize_packed_xla_nd(x32, fmt, block,
+                                                    scale_mode)
+        else:
+            codes, scales = _quantize_xla_nd(x32, fmt, block, scale_mode)
+        return QTensor(codes, scales, fmt, block, shape, packed)
     # Pallas kernels want (rows % 8, cols) 2D tiles
-    _, fn = dispatch.lookup("quantize", b)
+    _, fn = dispatch.lookup(op, b)
     lead = int(x32.size // x32.shape[-1])
     x2 = x32.reshape(lead, x32.shape[-1])
     pad_r = (-lead) % 8
     if pad_r:
         x2 = jnp.pad(x2, ((0, pad_r), (0, 0)))
     codes2, scales2 = fn(x2, fmt, block=block, scale_mode=scale_mode)
-    codes = codes2[:lead].reshape(*shape[:-1], x32.shape[-1])
+    codes = codes2[:lead].reshape(*shape[:-1], codes2.shape[-1])
     scales = scales2[:lead].reshape(*shape[:-1], x32.shape[-1] // block)
-    return QTensor(codes, scales, fmt, block, shape)
+    return QTensor(codes, scales, fmt, block, shape, packed)
 
 
 def dequantize(qt: QTensor, *, dtype=jnp.float32,
                backend: str | None = None) -> jnp.ndarray:
-    """Decode a :class:`QTensor` back to a dense array of its logical shape."""
+    """Decode a :class:`QTensor` back to a dense array of its logical shape.
+    Packed QTensors go through the fused ``dequantize_packed`` op — the
+    unpack happens in-register next to the decode, never as a host repack."""
     from repro.kernels import dispatch
     from repro.kernels import f2p_quant as K  # noqa: F401 (registers backends)
 
+    op = "dequantize_packed" if qt.packed else "dequantize"
     shape = qt.logical_shape
     n = shape[-1]
-    b = dispatch.resolve_backend(backend, op="dequantize")
+    npad = qt.npad
+    b = dispatch.resolve_backend(backend, op=op)
     if b == dispatch.XLA:
-        out = _dequantize_xla_nd(qt.codes, qt.scales, qt.fmt, qt.block)
+        if qt.packed:
+            out = _dequantize_packed_xla_nd(qt.codes, qt.scales, qt.fmt,
+                                            qt.block)
+        else:
+            out = _dequantize_xla_nd(qt.codes, qt.scales, qt.fmt, qt.block)
     else:
-        _, fn = dispatch.lookup("dequantize", b)
+        _, fn = dispatch.lookup(op, b)
         lead = int(qt.codes.size // qt.codes.shape[-1])
         c2 = qt.codes.reshape(lead, qt.codes.shape[-1])
         s2 = qt.scales.reshape(lead, qt.scales.shape[-1])
@@ -242,7 +372,7 @@ def dequantize(qt: QTensor, *, dtype=jnp.float32,
             s2 = jnp.pad(s2, ((0, pad_r), (0, 0)), constant_values=1.0)
         out = fn(c2, s2, qt.fmt, block=qt.block,
                  out_dtype=jnp.float32)[:lead]
-        out = out.reshape(*shape[:-1], qt.codes.shape[-1])
+        out = out.reshape(*shape[:-1], npad)
     if out.shape[-1] != n:
         out = jax.lax.slice_in_dim(out, 0, n, axis=-1)
     return out.astype(dtype)
@@ -253,7 +383,7 @@ def dequantize(qt: QTensor, *, dtype=jnp.float32,
 # ---------------------------------------------------------------------------
 def quantize_tree(tree, fmt: F2PFormat, *, block: int = 128,
                   min_size: int = 1024, scale_mode: str = "f32",
-                  backend: str | None = None):
+                  backend: str | None = None, packed: bool = False):
     """Quantize every float leaf with >= min_size elements; pass small leaves
     through (biases, norms — their bytes don't matter, their precision does)."""
 
@@ -261,7 +391,7 @@ def quantize_tree(tree, fmt: F2PFormat, *, block: int = 128,
         if (hasattr(x, "size") and x.size >= min_size
                 and jnp.issubdtype(x.dtype, jnp.floating)):
             return quantize(x, fmt, block=block, scale_mode=scale_mode,
-                            backend=backend)
+                            backend=backend, packed=packed)
         return x
 
     return jax.tree.map(q, tree)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
+from repro.kernels.bits import packed_nbytes
 
 FL_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 
@@ -48,6 +49,25 @@ class ClientConfig:
     min_size: int = 1024
     error_feedback: bool = True
     policy: Any = None   # FormatPolicy | None: per-leaf format overrides
+    # bit-packed update leaves on the wire (DESIGN.md §9): a 6-bit policy
+    # format then really costs 6 bits/elem. None defers to the process
+    # default (F2P_PACKED env).
+    packed: bool | None = None
+
+
+def leaf_wire_bytes(lead_rows: int, npad: int, block: int, fmt: F2PFormat,
+                    packed: bool) -> int:
+    """Wire bytes of one quantized leaf: codes + per-block f32 scales.
+
+    The ONE place the client-side codec-shrink check computes sizes — the
+    packed branch goes through the canonical ``kernels.bits.packed_nbytes``
+    (the same formula ``QTensor.nbytes`` and ``autotune.policy._leaf_bits``
+    use, so the three accountings can no longer drift apart)."""
+    if packed:
+        code_bytes = packed_nbytes(npad, fmt.n_bits)
+    else:
+        code_bytes = npad * np.dtype(fmt.code_dtype).itemsize
+    return lead_rows * (code_bytes + (npad // block) * 4)
 
 
 def init_client_residuals(params, ccfg: ClientConfig):
@@ -84,6 +104,7 @@ def _quantize_delta(delta, residuals, ccfg: ClientConfig):
     flat_d, td = jax.tree.flatten(delta)
     flat_r, rtd = jax.tree.flatten(residuals, is_leaf=_is_none)
     fmts = leaf_formats(delta, ccfg)
+    packed = QT.resolve_packed(ccfg.packed)
 
     ups, res = [], []
     for d, r, (_, fmt, blk) in zip(flat_d, flat_r, fmts):
@@ -94,8 +115,7 @@ def _quantize_delta(delta, residuals, ccfg: ClientConfig):
             res.append(r)
             continue
         npad = -(-d.shape[-1] // blk) * blk
-        code_b = np.dtype(fmt.code_dtype).itemsize
-        wire = (d.size // d.shape[-1]) * (npad * code_b + (npad // blk) * 4)
+        wire = leaf_wire_bytes(d.size // d.shape[-1], npad, blk, fmt, packed)
         if wire >= d.size * 4:
             # codec would not shrink this leaf (e.g. [N, 1]: 1B code + 4B
             # scale per element vs 4B raw) — ship it raw
@@ -105,7 +125,7 @@ def _quantize_delta(delta, residuals, ccfg: ClientConfig):
         din = d + (r if r is not None else 0.0)
         # block already capped at the leaf's last dim: a 128-block on a
         # 32-wide leaf would pad codes 4x and erase the wire win
-        qt = QT.quantize(din, fmt, block=blk)
+        qt = QT.quantize(din, fmt, block=blk, packed=packed)
         ups.append(qt)
         res.append(din - qt.dequantize(jnp.float32) if r is not None else r)
     return td.unflatten(ups), jax.tree.unflatten(rtd, res)

@@ -1,17 +1,46 @@
-"""Shared uint32 bit-mix primitives (murmur3 finalizer), jnp + numpy twins.
+"""Shared uint32 bit primitives: murmur3 finalizer + n-bit field packing.
 
-The single home of the avalanche mix used by the sketch row hashes
-(``repro.sketch.hashing``) and the counter-advance uniform stream
+jnp + numpy twins throughout — the device/host implementations must stay
+bit-identical, so there is exactly one copy of each algorithm per backend.
+
+``fmix32`` (murmur3 finalizer) is the avalanche mix used by the sketch row
+hashes (``repro.sketch.hashing``) and the counter-advance uniform stream
 (``repro.kernels.f2p_counter``): the constants are load-bearing
-(DESIGN.md §6.2) and the device/host implementations must stay
-bit-identical, so there is exactly one copy of each.
+(DESIGN.md §6.2).
+
+``pack_bits`` / ``unpack_bits`` are the packed-storage primitives
+(DESIGN.md §9): dense little-endian packing of ``n_bits``-wide code fields
+into uint32 words along the LAST axis. Element ``i`` of a row occupies bits
+``[i*n_bits, (i+1)*n_bits)`` of that row's bit stream; stream bit ``b``
+lives at bit ``b % 32`` of word ``b // 32``; within a field the LSB comes
+first. Rows never share words — each last-axis row packs into its own
+``packed_words(n, n_bits)`` words (trailing slack bits are zero), so
+leading-axis slicing / dynamic_update / all_gather of packed buffers stay
+word-aligned for free.
+
+``n_bits`` is static (a Python int): jit specializes per width, and the
+pure-reshape/shift formulation below contains no gathers — it runs
+unchanged inside Pallas kernel bodies (TPU has no gather unit; DESIGN.md
+§3). Widths that divide 32 (1, 2, 4, 8, 16) take a cheaper
+whole-words fast path; both paths produce identical layouts.
+
+``packed_nbytes`` is the ONE canonical packed-size formula — FL wire
+accounting, ``autotune.policy._leaf_bits`` and the checkpoint shrink check
+all call it (two hand-rolled copies of this already drifted once; see
+ISSUE 5).
 """
 from __future__ import annotations
 
+import functools
+import math
+import operator
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["fmix32", "fmix32_np"]
+__all__ = ["fmix32", "fmix32_np", "packed_words", "packed_nbytes",
+           "pack_bits", "unpack_bits", "pack_bits_np", "unpack_bits_np"]
 
 
 def fmix32(x: jnp.ndarray) -> jnp.ndarray:
@@ -32,3 +61,167 @@ def fmix32_np(x: np.ndarray) -> np.ndarray:
     x = x * np.uint32(0xC2B2AE35)
     x = x ^ (x >> np.uint32(16))
     return x
+
+
+# ---------------------------------------------------------------------------
+# Packed n-bit fields (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def packed_words(n_elems: int, n_bits: int) -> int:
+    """uint32 words holding ``n_elems`` dense little-endian n-bit fields."""
+    return -(-(int(n_elems) * int(n_bits)) // 32)
+
+
+def packed_nbytes(n_elems: int, n_bits: int) -> int:
+    """Bytes of one packed row — the canonical packed-size formula (wire
+    accounting, ``_leaf_bits(bits_mode='packed')`` and the checkpoint
+    shrink check must all agree, so they all call this)."""
+    return 4 * packed_words(n_elems, n_bits)
+
+
+def _check_n_bits(n_bits: int) -> int:
+    n_bits = int(n_bits)
+    if not 1 <= n_bits <= 32:
+        raise ValueError(f"n_bits must be in [1, 32], got {n_bits}")
+    return n_bits
+
+
+def _superblock(n_bits: int) -> tuple[int, int]:
+    """(elements, words) of the smallest group whose packed layout repeats:
+    L = lcm(32, n_bits) / n_bits elements fill exactly L*n_bits/32 words."""
+    L = 32 // math.gcd(32, n_bits)
+    return L, L * n_bits // 32
+
+
+def _mask32(n_bits: int):
+    return (1 << n_bits) - 1 if n_bits < 32 else 0xFFFFFFFF
+
+
+def pack_bits(codes: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Pack ``[..., n]`` unsigned codes (< 2^n_bits) into ``[..., W]`` uint32
+    words, little-endian dense along the last axis (W = packed_words(n)).
+
+    Static ``n_bits``: the loop below unrolls over ONE superblock (the
+    lcm(32, n_bits)-bit repeat period — at most 32 elements), so the traced
+    program is a handful of static-shift/OR lanes per word regardless of
+    ``n``. No gathers, no bit-matrix blowup — it fuses under jit and runs
+    unchanged inside Pallas kernel bodies (TPU has no gather unit)."""
+    n_bits = _check_n_bits(n_bits)
+    c = codes.astype(jnp.uint32) & jnp.uint32(_mask32(n_bits))
+    n = c.shape[-1]
+    lead = c.shape[:-1]
+    W = packed_words(n, n_bits)
+    L, WL = _superblock(n_bits)
+    nsb = -(-n // L)
+    pad = nsb * L - n
+    if pad:
+        c = jnp.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
+    cs = c.reshape(*lead, nsb, L)
+    terms: list[list] = [[] for _ in range(WL)]
+    for i in range(L):
+        o = i * n_bits
+        w0, s = o >> 5, o & 31
+        ci = cs[..., i]
+        terms[w0].append((ci << jnp.uint32(s)) if s else ci)
+        if s + n_bits > 32:  # field straddles into the next word
+            terms[w0 + 1].append(ci >> jnp.uint32(32 - s))
+    words = jnp.stack([functools.reduce(operator.or_, t) for t in terms],
+                      axis=-1)
+    return words.reshape(*lead, nsb * WL)[..., :W]
+
+
+def unpack_bits(words: jnp.ndarray, n_bits: int, count: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`: ``[..., W]`` uint32 words -> ``[...,
+    count]`` uint32 codes. Static ``n_bits``/``count``; gather-free (same
+    unrolled-superblock formulation as :func:`pack_bits`)."""
+    n_bits = _check_n_bits(n_bits)
+    count = int(count)
+    w = words.astype(jnp.uint32)
+    lead = w.shape[:-1]
+    W = w.shape[-1]
+    if W < packed_words(count, n_bits):
+        raise ValueError(
+            f"{W} words cannot hold {count} fields of {n_bits} bits")
+    mask = jnp.uint32(_mask32(n_bits))
+    L, WL = _superblock(n_bits)
+    nsb = -(-count // L)
+    need = nsb * WL
+    if need > W:
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, need - W)])
+    elif need < W:  # caller handed a longer row; the tail is other fields
+        w = w[..., :need]
+    ws = w.reshape(*lead, nsb, WL)
+    elems = []
+    for i in range(L):
+        o = i * n_bits
+        w0, s = o >> 5, o & 31
+        lo = (ws[..., w0] >> jnp.uint32(s)) if s else ws[..., w0]
+        if s + n_bits > 32:
+            lo = lo | (ws[..., w0 + 1] << jnp.uint32(32 - s))
+        elems.append(lo & mask)
+    out = jnp.stack(elems, axis=-1)
+    return out.reshape(*lead, nsb * L)[..., :count]
+
+
+def pack_bits_np(codes: np.ndarray, n_bits: int) -> np.ndarray:
+    """Bit-identical numpy twin of :func:`pack_bits` (host/wire paths)."""
+    n_bits = _check_n_bits(n_bits)
+    # mask exactly like the jnp twin: an out-of-range code must not bleed
+    # into its neighbor's field on one backend but not the other
+    c = np.asarray(codes).astype(np.uint32) & np.uint32(_mask32(n_bits))
+    n = c.shape[-1]
+    lead = c.shape[:-1]
+    W = packed_words(n, n_bits)
+    if 32 % n_bits == 0:
+        per = 32 // n_bits
+        pad = W * per - n
+        if pad:
+            c = np.pad(c, [(0, 0)] * (c.ndim - 1) + [(0, pad)])
+        cw = c.reshape(*lead, W, per)
+        shifts = (np.arange(per, dtype=np.uint32) * np.uint32(n_bits))
+        return np.bitwise_or.reduce(cw << shifts, axis=-1).astype(np.uint32)
+    bits = (c[..., None] >> np.arange(n_bits, dtype=np.uint32)) & np.uint32(1)
+    flat = bits.reshape(*lead, n * n_bits)
+    pad = W * 32 - n * n_bits
+    if pad:
+        flat = np.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, pad)])
+    w = flat.reshape(*lead, W, 32)
+    return np.bitwise_or.reduce(
+        w << np.arange(32, dtype=np.uint32), axis=-1).astype(np.uint32)
+
+
+def unpack_bits_np(words: np.ndarray, n_bits: int, count: int) -> np.ndarray:
+    """Bit-identical numpy twin of :func:`unpack_bits`."""
+    n_bits = _check_n_bits(n_bits)
+    count = int(count)
+    w = np.asarray(words).astype(np.uint32)
+    lead = w.shape[:-1]
+    W = w.shape[-1]
+    if W < packed_words(count, n_bits):
+        raise ValueError(
+            f"{W} words cannot hold {count} fields of {n_bits} bits")
+    mask = np.uint32((1 << n_bits) - 1) if n_bits < 32 \
+        else np.uint32(0xFFFFFFFF)
+    if 32 % n_bits == 0:
+        per = 32 // n_bits
+        shifts = (np.arange(per, dtype=np.uint32) * np.uint32(n_bits))
+        c = (w[..., None] >> shifts) & mask
+        return c.reshape(*lead, W * per)[..., :count]
+    bits = (w[..., None] >> np.arange(32, dtype=np.uint32)) & np.uint32(1)
+    flat = bits.reshape(*lead, W * 32)[..., :count * n_bits]
+    b = flat.reshape(*lead, count, n_bits)
+    acc = np.zeros(b.shape[:-1], np.uint32)
+    for j in range(n_bits):
+        acc |= b[..., j] << np.uint32(j)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def pack_bits_jit(codes, n_bits: int):
+    """Jitted eager entry point (host callers outside a surrounding jit)."""
+    return pack_bits(codes, n_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "count"))
+def unpack_bits_jit(words, n_bits: int, count: int):
+    """Jitted eager entry point (host callers outside a surrounding jit)."""
+    return unpack_bits(words, n_bits, count)

@@ -30,6 +30,13 @@ op actually has an implementation for it. Registered ops:
 
   ``quantize`` / ``dequantize``            block-scaled F2P tensor codecs
                                            (``kernels/f2p_quant.py``)
+  ``quantize_packed`` / ``dequantize_packed``  the same codecs with the n-bit
+                                           field pack/unpack fused into the
+                                           kernel body — packed QTensor
+                                           storage (DESIGN.md §9)
+  ``dequant_matmul`` / ``dequant_matmul_packed``  fused dequantize-matmul on
+                                           byte-aligned / bit-packed weight
+                                           streams (``kernels/f2p_matmul.py``)
   ``counter_advance`` / ``counter_estimate``  batched probabilistic grid-counter
                                            updates + decode-LUT estimate reads
                                            for the sketch engine

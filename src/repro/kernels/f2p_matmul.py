@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core.qtensor import block_scales
 from repro.kernels import dispatch
+from repro.kernels.bits import pack_bits, packed_words, unpack_bits
 from repro.kernels.f2p_quant import dequantize_tile_math, quantize_tile_math
 
 WEIGHT_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
@@ -32,10 +33,16 @@ WEIGHT_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 M_T, N_T, K_T = 128, 256, 256
 
 
-def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128):
+def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128,
+                    packed: bool = False):
     """w [K,N] -> (codes uint8 [K,N], scales f32 [K/block, N]). The scale
     block runs along K (the contraction axis) so dequant*x accumulates per
-    K-block — matching the kernel's K-tiled loop."""
+    K-block — matching the kernel's K-tiled loop.
+
+    ``packed=True`` packs each K-row's N codes into little-endian uint32
+    words -> (words uint32 [K, packed_words(N, n_bits)], scales): the
+    storage layout ``f2p_dequant_matmul_packed`` streams (n_bits/8 bytes
+    per weight on the HBM weight stream instead of the code dtype's 1-2)."""
     K, N = w.shape
     assert K % block == 0
     wb = w.astype(jnp.float32).reshape(K // block, block, N)
@@ -43,8 +50,10 @@ def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128):
     # blocks the LAST axis — feed it the [N, K/block, block] view
     scale = block_scales(jnp.moveaxis(wb, -1, 0), fmt).T
     codes = quantize_tile_math((wb / scale[:, None, :]).astype(jnp.float32),
-                               fmt)
-    return codes.reshape(K, N), scale
+                               fmt).reshape(K, N)
+    if packed:
+        return pack_bits(codes, fmt.n_bits), scale
+    return codes, scale
 
 
 def ref_dequant_matmul(x, codes, scales, fmt: F2PFormat = WEIGHT_FMT,
@@ -105,6 +114,70 @@ def _dequant_matmul_jit(x, codes, scales, *, fmt: F2PFormat,
 
 
 # ---------------------------------------------------------------------------
+# Packed-weight variant (DESIGN.md §9): W lives in HBM as dense n-bit fields
+# in uint32 words — each grid step streams an (K_T, words(N_T)) WORD tile
+# into VMEM (n_bits/8 bytes per weight: 0.75 B at 6-bit vs the 1 B uint8
+# stream, 2.7x less than bf16) and unpacks in-register immediately before
+# the branch-free decode. Word alignment: N_T = 256 is a multiple of 32, so
+# every column tile covers an integral number of words for any n_bits; rows
+# (the K axis) never share words, so K tiling is unaffected.
+# ---------------------------------------------------------------------------
+def _packed_kernel(fmt, block, nk, x_ref, w_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # [M_T, K_T]
+    nt = s_ref.shape[-1]
+    codes = unpack_bits(w_ref[...], fmt.n_bits, nt).astype(jnp.int32)
+    w = dequantize_tile_math(codes, fmt, jnp.float32)       # [K_T, N_T]
+    kt, _ = w.shape
+    w = (w.reshape(kt // block, block, nt) * s_ref[...][:, None, :])
+    w = w.reshape(kt, nt)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def f2p_dequant_matmul_packed(x, words, scales, *,
+                              fmt: F2PFormat = WEIGHT_FMT, block: int = 128,
+                              interpret: bool | None = None):
+    """y = x @ dequant(unpack(words), scales); words [K, packed_words(N)]
+    uint32 from ``quantize_weight(..., packed=True)``."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _dequant_matmul_packed_jit(x, words, scales, fmt=fmt, block=block,
+                                      interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def _dequant_matmul_packed_jit(x, words, scales, *, fmt: F2PFormat,
+                               block: int, interpret: bool):
+    M, K = x.shape
+    N = scales.shape[-1]
+    K2, W = words.shape
+    assert K == K2 and K % K_T == 0 and K_T % block == 0
+    assert W == packed_words(N, fmt.n_bits), (W, N, fmt.n_bits)
+    mt, nt = min(M_T, M), min(N_T, N)
+    assert M % mt == 0 and N % nt == 0
+    if nt != N:
+        # multi-tile columns: tiles must land on word boundaries
+        assert nt % 32 == 0, f"column tile {nt} not word-aligned"
+    wt = packed_words(nt, fmt.n_bits)
+    grid = (M // mt, N // nt, K // K_T)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, fmt, block, K // K_T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mt, K_T), lambda i, j, k: (i, k)),
+            pl.BlockSpec((K_T, wt), lambda i, j, k: (k, j)),
+            pl.BlockSpec((K_T // block, nt), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, words, scales)
+
+
+# ---------------------------------------------------------------------------
 # Registry wiring: serve paths pick the backend through one dispatch point
 # ---------------------------------------------------------------------------
 @dispatch.register("dequant_matmul", dispatch.PALLAS)
@@ -125,8 +198,34 @@ def _matmul_xla(x, codes, scales, *, fmt=WEIGHT_FMT, block=128):
     return ref_dequant_matmul(x, codes, scales, fmt, block)
 
 
+@dispatch.register("dequant_matmul_packed", dispatch.PALLAS)
+def _matmul_packed_pallas(x, words, scales, *, fmt=WEIGHT_FMT, block=128):
+    return f2p_dequant_matmul_packed(x, words, scales, fmt=fmt, block=block,
+                                     interpret=False)
+
+
+@dispatch.register("dequant_matmul_packed", dispatch.PALLAS_INTERPRET)
+def _matmul_packed_pallas_interp(x, words, scales, *, fmt=WEIGHT_FMT,
+                                 block=128):
+    return f2p_dequant_matmul_packed(x, words, scales, fmt=fmt, block=block,
+                                     interpret=True)
+
+
+@dispatch.register("dequant_matmul_packed", dispatch.XLA)
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def _matmul_packed_xla(x, words, scales, *, fmt=WEIGHT_FMT, block=128):
+    N = scales.shape[-1]
+    codes = unpack_bits(words, fmt.n_bits, N).astype(jnp.int32)
+    return ref_dequant_matmul(x, codes, scales, fmt, block)
+
+
 def dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,
-                   block: int = 128, backend: str | None = None):
-    """Backend-dispatched y = x @ dequant(codes, scales)."""
-    _, fn = dispatch.lookup("dequant_matmul", backend)
+                   block: int = 128, backend: str | None = None,
+                   packed: bool = False):
+    """Backend-dispatched y = x @ dequant(codes, scales). With
+    ``packed=True``, ``codes`` is the uint32 word stream of
+    ``quantize_weight(..., packed=True)`` and the unpack fuses into the
+    kernel (Pallas) / the surrounding HLO (XLA)."""
+    op = "dequant_matmul_packed" if packed else "dequant_matmul"
+    _, fn = dispatch.lookup(op, backend)
     return fn(x, codes, scales, fmt=fmt, block=block)

@@ -31,10 +31,13 @@ from jax.experimental import pallas as pl
 from repro.core.f2p import F2PFormat
 from repro.core.qtensor import block_scales
 from repro.kernels import dispatch
+from repro.kernels.bits import pack_bits, packed_words, unpack_bits
 
 __all__ = ["quantize_tile_math", "dequantize_tile_math", "dequantize_lut",
            "f2p_quantize_pallas", "f2p_dequantize_pallas",
-           "f2p_quantize_xla", "f2p_dequantize_xla"]
+           "f2p_quantize_xla", "f2p_dequantize_xla",
+           "f2p_quantize_packed_pallas", "f2p_dequantize_packed_pallas",
+           "f2p_quantize_packed_xla", "f2p_dequantize_packed_xla"]
 
 # Default tile: 8 sublanes x 512 lanes of f32 = 16 KiB in, 4 KiB codes out.
 TILE_R = 8
@@ -315,6 +318,148 @@ def f2p_dequantize_xla(codes: jnp.ndarray, scales: jnp.ndarray,
     return vals.reshape(r, c).astype(out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# Packed variants (DESIGN.md §9): the bit pack/unpack fuses INTO the kernel
+# body — packed tensors are quantized and decoded without a byte-aligned
+# codes tensor ever hitting HBM. Tile alignment: a column tile of tile_c
+# codes occupies exactly packed_words(tile_c, n_bits) uint32 words, which is
+# word-exact either when the row fits one tile (tile_c == c: the trailing
+# slack words belong to the tile) or when tile_c is a multiple of 32
+# (tile_c * n_bits ≡ 0 mod 32 for every n_bits) — the default TILE_C = 512
+# satisfies the latter, and _packed_tiles() enforces it.
+# ---------------------------------------------------------------------------
+def _packed_tiles(c: int, tile_c: int, n_bits: int) -> tuple[int, int]:
+    """(code tile width, word tile width) for a row of ``c`` codes."""
+    tile_c = min(tile_c, c)
+    if tile_c != c and (tile_c % 32 != 0 or c % tile_c != 0):
+        raise ValueError(
+            f"packed tiling needs tile_c % 32 == 0 dividing c (got tile_c="
+            f"{tile_c}, c={c}) so tile boundaries stay word-aligned")
+    return tile_c, packed_words(tile_c, n_bits)
+
+
+def _quant_packed_kernel(fmt: F2PFormat, block: int, scale_mode: str,
+                         x_ref, words_ref, scales_ref):
+    x = x_ref[...].astype(jnp.float32)
+    r, ccols = x.shape
+    xb = x.reshape(r, ccols // block, block)
+    scale = _block_scales(xb, fmt, scale_mode)
+    y = (xb / scale[..., None]).astype(jnp.float32).reshape(r, ccols)
+    words_ref[...] = pack_bits(quantize_tile_math(y, fmt), fmt.n_bits)
+    scales_ref[...] = scale
+
+
+def _dequant_packed_kernel(fmt: F2PFormat, block: int, out_dtype,
+                           words_ref, scales_ref, out_ref):
+    scales = scales_ref[...]
+    r, nblk = scales.shape
+    ccols = nblk * block
+    codes = unpack_bits(words_ref[...], fmt.n_bits, ccols).astype(jnp.int32)
+    vals = dequantize_tile_math(codes, fmt, jnp.float32)
+    vals = vals.reshape(r, nblk, block) * scales[..., None]
+    out_ref[...] = vals.reshape(r, ccols).astype(out_dtype)
+
+
+def f2p_quantize_packed_pallas(x: jnp.ndarray, fmt: F2PFormat, *,
+                               block: int = 128, scale_mode: str = "f32",
+                               interpret: bool | None = None,
+                               tile_r: int = TILE_R, tile_c: int = TILE_C):
+    """Blocked F2P quantization straight into packed words: (words, scales).
+    Bitwise: ``pack_bits(f2p_quantize_pallas(x)[0])``."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _quantize_packed_pallas_jit(x, fmt, block=block,
+                                       scale_mode=scale_mode,
+                                       interpret=bool(interpret),
+                                       tile_r=tile_r, tile_c=tile_c)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode",
+                                             "interpret", "tile_r", "tile_c"))
+def _quantize_packed_pallas_jit(x: jnp.ndarray, fmt: F2PFormat, *, block: int,
+                                scale_mode: str, interpret: bool,
+                                tile_r: int, tile_c: int):
+    r, c = x.shape
+    tile_c, tile_w = _packed_tiles(c, tile_c, fmt.n_bits)
+    tile_r = min(tile_r, r)
+    assert c % block == 0 and tile_c % block == 0
+    grid = _grid2d((r, c), tile_r, tile_c)
+    W = grid[1] * tile_w
+    words, scales = pl.pallas_call(
+        functools.partial(_quant_packed_kernel, fmt, block, scale_mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tile_r, tile_w), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_r, tile_c // block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, W), jnp.uint32),
+            jax.ShapeDtypeStruct((r, c // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return words, scales
+
+
+def f2p_dequantize_packed_pallas(words: jnp.ndarray, scales: jnp.ndarray,
+                                 fmt: F2PFormat, *, block: int = 128,
+                                 out_dtype=jnp.float32,
+                                 interpret: bool | None = None,
+                                 tile_r: int = TILE_R, tile_c: int = TILE_C):
+    """Fused unpack-dequantize of packed words (word tiles stream to VMEM,
+    codes exist only in-register)."""
+    if interpret is None:
+        interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    return _dequantize_packed_pallas_jit(words, scales, fmt, block=block,
+                                         out_dtype=out_dtype,
+                                         interpret=bool(interpret),
+                                         tile_r=tile_r, tile_c=tile_c)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype",
+                                             "interpret", "tile_r", "tile_c"))
+def _dequantize_packed_pallas_jit(words: jnp.ndarray, scales: jnp.ndarray,
+                                  fmt: F2PFormat, *, block: int,
+                                  out_dtype, interpret: bool,
+                                  tile_r: int, tile_c: int):
+    r, c = scales.shape[0], scales.shape[1] * block
+    tile_c, tile_w = _packed_tiles(c, tile_c, fmt.n_bits)
+    tile_r = min(tile_r, r)
+    grid = _grid2d((r, c), tile_r, tile_c)
+    out = pl.pallas_call(
+        functools.partial(_dequant_packed_kernel, fmt, block, out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, tile_w), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_r, tile_c // block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(words, scales)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def f2p_quantize_packed_xla(x: jnp.ndarray, fmt: F2PFormat, *,
+                            block: int = 128, scale_mode: str = "f32"):
+    """Fused tile-math encode + bit pack as one XLA program."""
+    codes, scale = f2p_quantize_xla(x, fmt, block=block, scale_mode=scale_mode)
+    return pack_bits(codes, fmt.n_bits), scale
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype"))
+def f2p_dequantize_packed_xla(words: jnp.ndarray, scales: jnp.ndarray,
+                              fmt: F2PFormat, *, block: int = 128,
+                              out_dtype=jnp.float32):
+    """Fused unpack + blocked dequantize (npad derives from the scales)."""
+    npad = scales.shape[-1] * block
+    codes = unpack_bits(words, fmt.n_bits, npad).astype(jnp.int32)
+    return f2p_dequantize_xla(codes, scales, fmt, block=block,
+                              out_dtype=out_dtype)
+
+
 @dispatch.register("quantize", dispatch.PALLAS)
 def _quantize_pallas_compiled(x, fmt, *, block=128, scale_mode="f32"):
     return f2p_quantize_pallas(x, fmt, block=block, scale_mode=scale_mode,
@@ -345,3 +490,35 @@ def _dequantize_pallas_interp(codes, scales, fmt, *, block=128,
 
 
 dispatch.register("dequantize", dispatch.XLA)(f2p_dequantize_xla)
+
+
+@dispatch.register("quantize_packed", dispatch.PALLAS)
+def _quantize_packed_pallas_compiled(x, fmt, *, block=128, scale_mode="f32"):
+    return f2p_quantize_packed_pallas(x, fmt, block=block,
+                                      scale_mode=scale_mode, interpret=False)
+
+
+@dispatch.register("quantize_packed", dispatch.PALLAS_INTERPRET)
+def _quantize_packed_pallas_interp(x, fmt, *, block=128, scale_mode="f32"):
+    return f2p_quantize_packed_pallas(x, fmt, block=block,
+                                      scale_mode=scale_mode, interpret=True)
+
+
+dispatch.register("quantize_packed", dispatch.XLA)(f2p_quantize_packed_xla)
+
+
+@dispatch.register("dequantize_packed", dispatch.PALLAS)
+def _dequantize_packed_pallas_compiled(words, scales, fmt, *, block=128,
+                                       out_dtype=jnp.float32):
+    return f2p_dequantize_packed_pallas(words, scales, fmt, block=block,
+                                        out_dtype=out_dtype, interpret=False)
+
+
+@dispatch.register("dequantize_packed", dispatch.PALLAS_INTERPRET)
+def _dequantize_packed_pallas_interp(words, scales, fmt, *, block=128,
+                                     out_dtype=jnp.float32):
+    return f2p_dequantize_packed_pallas(words, scales, fmt, block=block,
+                                        out_dtype=out_dtype, interpret=True)
+
+
+dispatch.register("dequantize_packed", dispatch.XLA)(f2p_dequantize_packed_xla)

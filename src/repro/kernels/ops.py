@@ -37,10 +37,12 @@ def _pick_backend(backend: str | None, use_pallas: bool | None) -> str | None:
 
 def f2p_quantize(x: jnp.ndarray, fmt: F2PFormat, *, block: int = 128,
                  scale_mode: str = "f32", backend: str | None = None,
-                 use_pallas: bool | None = None) -> QTensor:
+                 use_pallas: bool | None = None,
+                 packed: bool = False) -> QTensor:
     """Block-quantize any-rank array along its last axis into a QTensor."""
     return QT.quantize(x, fmt, block=block, scale_mode=scale_mode,
-                       backend=_pick_backend(backend, use_pallas))
+                       backend=_pick_backend(backend, use_pallas),
+                       packed=packed)
 
 
 def f2p_dequantize(codes, scales, fmt: F2PFormat, *, block: int = 128,

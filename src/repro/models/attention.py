@@ -8,7 +8,9 @@ path) or :class:`repro.core.qtensor.QTensor` values (F2P8 path: uint8 codes
 canonical last-axis-blocked QTensor layout with block = head_dim). QTensor is
 a registered pytree, so the quantized cache jits/scans/shards exactly like
 the dense one; writes go through ``QTensor.dynamic_update`` which updates
-codes and scales coherently.
+codes and scales coherently. With ``packed=True`` (DESIGN.md §9) the codes
+leaf holds bit-packed uint32 words — block = head_dim means every token's
+codes are whole rows, so slab writes never straddle a word boundary.
 """
 from __future__ import annotations
 
@@ -42,8 +44,8 @@ def init_attention(key, cfg, cross: bool = False):
 # the format back off the live cache QTensor, so mixed-format stacks need no
 # extra plumbing.
 # ---------------------------------------------------------------------------
-def quantize_kv(k, fmt: F2PFormat = KV_FMT) -> QTensor:
-    return QT.quantize(k, fmt, block=k.shape[-1])
+def quantize_kv(k, fmt: F2PFormat = KV_FMT, packed: bool = False) -> QTensor:
+    return QT.quantize(k, fmt, block=k.shape[-1], packed=packed)
 
 
 def dequantize_kv(qt: QTensor, dtype):
@@ -276,7 +278,7 @@ def _attend(q, k, v, cfg, *, causal, kv_len=None, q_offset=0):
 # Cache plumbing
 # ---------------------------------------------------------------------------
 def init_cache(cfg, batch, max_seq, quantized: bool, dtype,
-               fmt: F2PFormat = KV_FMT):
+               fmt: F2PFormat = KV_FMT, packed: bool = False):
     K, hd = cfg.n_kv_heads, cfg.head_dim
     if quantized:
         # the code of VALUE zero (flavor-dependent: 0 for SR/SI, the top
@@ -286,11 +288,22 @@ def init_cache(cfg, batch, max_seq, quantized: bool, dtype,
         zero_code = int(fmt.encode_nearest(np.zeros(1))[0])
 
         def empty():
+            if packed:
+                # rows never share words, so the empty cache is one packed
+                # zero-code head_dim row broadcast everywhere — a token's
+                # codes can never straddle a word boundary by construction
+                from repro.kernels.bits import pack_bits_np
+
+                row = pack_bits_np(
+                    np.full((hd,), zero_code, np.uint32), fmt.n_bits)
+                codes = jnp.broadcast_to(
+                    jnp.asarray(row), (batch, max_seq, K, row.size))
+            else:
+                codes = jnp.full((batch, max_seq, K, hd), zero_code,
+                                 jnp.dtype(fmt.code_dtype))
             return QTensor.from_parts(
-                jnp.full((batch, max_seq, K, hd), zero_code,
-                         jnp.dtype(fmt.code_dtype)),
-                jnp.ones((batch, max_seq, K, 1), jnp.float32),
-                fmt, hd, (batch, max_seq, K, hd))
+                codes, jnp.ones((batch, max_seq, K, 1), jnp.float32),
+                fmt, hd, (batch, max_seq, K, hd), packed=packed)
 
         return {"k": empty(), "v": empty()}
     return {"k": jnp.zeros((batch, max_seq, K, hd), dtype),
@@ -300,8 +313,11 @@ def init_cache(cfg, batch, max_seq, quantized: bool, dtype,
 def _cache_write(cache, k, v, idx):
     if isinstance(cache["k"], QTensor):
         kf, vf = cache["k"].fmt, cache["v"].fmt
-        return {"k": cache["k"].dynamic_update(quantize_kv(k, kf), idx, axis=1),
-                "v": cache["v"].dynamic_update(quantize_kv(v, vf), idx, axis=1)}
+        pk = cache["k"].packed
+        return {"k": cache["k"].dynamic_update(quantize_kv(k, kf, pk),
+                                               idx, axis=1),
+                "v": cache["v"].dynamic_update(quantize_kv(v, vf, pk),
+                                               idx, axis=1)}
     upd = jax.lax.dynamic_update_slice_in_dim
     return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
 

@@ -254,16 +254,23 @@ def train_forward(params, batch, cfg: ModelConfig):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
-                quantized_kv: bool = False, kv_policy=None):
+                quantized_kv: bool = False, kv_policy=None,
+                packed_kv: bool | None = None):
     """Cache pytree with leading [G] dim per pattern position.
 
     ``kv_policy`` (repro.autotune.policy.FormatPolicy | None) picks the
     quantized-KV format per pattern position: rule paths are ``kv/b<i>``
     (so ``kv/*`` sets a stack-wide format and exact paths override single
     layers). Positions inside one scan group share a format by construction
-    — the pattern position IS the per-layer granularity the scan admits."""
+    — the pattern position IS the per-layer granularity the scan admits.
+
+    ``packed_kv`` stores quantized caches bit-packed (DESIGN.md §9):
+    ``None`` defers to the process default (``F2P_PACKED`` env)."""
+    from repro.core.qtensor import resolve_packed
+
     G = cfg.n_groups
     dt = cfg.jnp_dtype
+    packed = resolve_packed(packed_kv)
 
     def one(i: int, spec: BlockSpec):
         if spec.mixer == "attn":
@@ -271,7 +278,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
             if kv_policy is not None:
                 fmt, _ = kv_policy.f2p_for(f"kv/b{i}", (fmt, 0))
             return A.init_cache(cfg, batch, max_seq, quantized_kv, dt,
-                                fmt=fmt)
+                                fmt=fmt, packed=packed)
         if spec.mixer == "mamba":
             return SSM.init_mamba_cache(cfg, batch, dt)
         if spec.mixer == "mlstm":

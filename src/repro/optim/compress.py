@@ -54,6 +54,10 @@ class CompressionConfig:
     block: int = 128
     error_feedback: bool = True
     min_size: int = 4096   # leaves smaller than this stay uncompressed
+    # bit-packed codes on the all_gather leg (DESIGN.md §9): the gather
+    # exchanges uint32 words at n_bits/8 bytes per element instead of the
+    # byte-aligned code dtype. None defers to the F2P_PACKED env default.
+    packed: bool | None = None
 
 
 def _roundtrip(x, fmt: F2PFormat, block: int):
@@ -125,9 +129,15 @@ def compressed_psum(g: jnp.ndarray, axis_name: str, ccfg: CompressionConfig):
     the gather-side dequantize needs no extra multiply. Both leaves (codes + scales) ride
     all_gather and reassemble zero-copy via ``QTensor.from_parts``:
     wire bytes = N/W * 4 (scatter, f32) + N * (1 + 4/block) (gather codes)
-    vs 2 * N * 4 for a ring all-reduce in f32."""
+    vs 2 * N * 4 for a ring all-reduce in f32.
+
+    With ``ccfg.packed`` the gather leg exchanges bit-packed uint32 words
+    (n_bits/8 bytes per element). Rows never share words, so the row-axis
+    all_gather of packed leaves is word-aligned by construction and the
+    reassembled QTensor is bitwise the packed twin of the unpacked one."""
     w = jax.lax.psum(1, axis_name)
     n = g.shape[0]
+    packed = QT.resolve_packed(ccfg.packed)
     pad = (-n) % w
     gp = jnp.pad(g.reshape(n, -1), ((0, pad), (0, 0))) if pad else g.reshape(n, -1)
     shard_sum = jax.lax.psum_scatter(gp, axis_name, scatter_dimension=0,
@@ -135,11 +145,11 @@ def compressed_psum(g: jnp.ndarray, axis_name: str, ccfg: CompressionConfig):
     cols = shard_sum.shape[-1]
     # quantize the local SUM shard, fold the mean into the scales
     qt = QT.quantize(shard_sum.astype(jnp.float32), ccfg.fmt,
-                     block=ccfg.block).scale_by(1.0 / w)
+                     block=ccfg.block, packed=packed).scale_by(1.0 / w)
     # exchange compressed: the QTensor's leaves go on the wire directly
     codes_all = jax.lax.all_gather(qt.codes, axis_name, axis=0, tiled=True)
     scale_all = jax.lax.all_gather(qt.scales, axis_name, axis=0, tiled=True)
     full = QTensor.from_parts(codes_all, scale_all, ccfg.fmt, ccfg.block,
-                              (codes_all.shape[0], cols))
+                              (codes_all.shape[0], cols), packed=packed)
     out = full.dequantize(jnp.float32)
     return out[:n].reshape(g.shape).astype(g.dtype)

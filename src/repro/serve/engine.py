@@ -28,6 +28,12 @@ class ServeConfig:
     # per-layer KV formats (repro.autotune.policy.FormatPolicy | None);
     # None keeps the single hardcoded attention.KV_FMT everywhere
     kv_policy: Any = None
+    # bit-packed quantized KV storage (DESIGN.md §9); None defers to the
+    # process default (F2P_PACKED env)
+    packed_kv: bool | None = None
+    # donate the cache buffers to the jitted prefill/decode steps so each
+    # step updates the KV cache in place instead of allocating a fresh copy
+    donate_caches: bool = True
 
 
 def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
@@ -61,8 +67,15 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
         self.cfg, self.scfg, self.params = cfg, scfg, params
-        self._prefill = jax.jit(make_prefill_step(cfg, scfg))
-        self._step = jax.jit(make_serve_step(cfg, scfg))
+        # cache donation: the KV cache dominates decode-step memory traffic
+        # and is dead after each step (generate() rebinds it), so donating
+        # lets XLA alias the update in place — one cache allocation for the
+        # whole generation instead of one per token. Params are NOT donated:
+        # they are reused by every subsequent call.
+        don = dict(donate_argnums=(2,)) if scfg.donate_caches else {}
+        self._prefill = jax.jit(make_prefill_step(cfg, scfg), **don)
+        don = dict(donate_argnums=(1,)) if scfg.donate_caches else {}
+        self._step = jax.jit(make_serve_step(cfg, scfg), **don)
 
     def generate(self, prompts: np.ndarray, max_new: int, eos: int = -1):
         """Decode loop with a device-side token buffer: tokens stay on
@@ -73,7 +86,8 @@ class Engine:
         assert B == self.scfg.batch
         caches = init_caches(self.cfg, B, self.scfg.max_seq,
                              quantized_kv=self.scfg.quantized_kv,
-                             kv_policy=self.scfg.kv_policy)
+                             kv_policy=self.scfg.kv_policy,
+                             packed_kv=self.scfg.packed_kv)
         batch = {"tokens": jnp.asarray(prompts)}
         logits, caches = self._prefill(self.params, batch, caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

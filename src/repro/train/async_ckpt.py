@@ -21,11 +21,12 @@ from repro.train import checkpoint
 
 class AsyncCheckpointer:
     def __init__(self, ckpt_dir: str, *, keep: int = 3, compress: bool = True,
-                 policy=None):
+                 policy=None, packed: bool | None = None):
         self.dir = ckpt_dir
         self.keep = keep
         self.compress = compress
         self.policy = policy   # FormatPolicy | None: per-leaf ckpt formats
+        self.packed = packed   # bit-packed payloads; None -> F2P_PACKED env
         self._lock = threading.Condition()
         self._pending: tuple[int, Any] | None = None
         self._busy = False
@@ -53,7 +54,8 @@ class AsyncCheckpointer:
                 self._busy = True
             try:
                 checkpoint.save(self.dir, step, host, keep=self.keep,
-                                compress=self.compress, policy=self.policy)
+                                compress=self.compress, policy=self.policy,
+                                packed=self.packed)
             except Exception as e:  # surfaced on wait()
                 self._errors.append(e)
             finally:

@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing: atomic writes, K-last retention, optional
-F2P16 payload compression via the canonical QTensor codec, mesh-agnostic
-restore.
+F2P16 payload compression via the canonical QTensor codec (optionally
+bit-packed — DESIGN.md §9), mesh-agnostic restore.
 
 Layout: <dir>/step_<n>/ with one msgpack index + raw .npy-style buffers.
 Writes go to a tmp dir then os.replace() — a crash mid-write never corrupts
@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
 from repro.core.qtensor import QTensor
+from repro.kernels.bits import packed_nbytes
 
 CKPT_FMT = F2PFormat(n_bits=16, h_bits=2, flavor=Flavor.SR, signed=True)
 
@@ -55,21 +56,26 @@ def _flatten(tree):
 
 
 def _codec_shrinks(arr: np.ndarray, block: int,
-                   fmt: F2PFormat = CKPT_FMT) -> bool:
+                   fmt: F2PFormat = CKPT_FMT, packed: bool = False) -> bool:
     """Would the codec's codes+scales actually be smaller than the raw
     bytes? Narrow-last-dim leaves (e.g. [N, 1]: 2B code + 4B scale per
-    element vs 4B raw) expand under the codec and must stay raw."""
+    element vs 4B raw) expand under the codec and must stay raw. Packed
+    sizes come from the canonical ``kernels.bits.packed_nbytes``."""
     blk = min(block, arr.shape[-1])
     npad = -(-arr.shape[-1] // blk) * blk
     lead = arr.size // arr.shape[-1]
-    compressed = lead * (npad * np.dtype(fmt.code_dtype).itemsize
-                         + (npad // blk) * 4)
+    if packed:
+        code_bytes = packed_nbytes(npad, fmt.n_bits)
+    else:
+        code_bytes = npad * np.dtype(fmt.code_dtype).itemsize
+    compressed = lead * (code_bytes + (npad // blk) * 4)
     return compressed < arr.nbytes
 
 
 def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
          keep: int = 3, block: int = 128, min_size: int = 65536,
-         fmt: F2PFormat = CKPT_FMT, policy=None) -> str:
+         fmt: F2PFormat = CKPT_FMT, policy=None,
+         packed: bool | None = None) -> str:
     """Atomically write `tree` as step_<step>; prune to `keep` newest.
 
     ``policy`` (repro.autotune.policy.FormatPolicy | None) does two things:
@@ -77,7 +83,15 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
     ``ckpt/<leaf path>``; per-leaf format descriptors were already stored in
     the index, so restore needs nothing new) and it is round-tripped as
     ``policy.json`` inside the step dir — ``load_policy`` recovers it, so a
-    restart resumes with the exact formats the run had solved for."""
+    restart resumes with the exact formats the run had solved for.
+
+    ``packed`` stores compressed payloads as bit-packed uint32 words
+    (DESIGN.md §9) and records the flag per leaf in the index — a 6-bit
+    policy format then really costs 6 bits/elem on disk. ``None`` defers to
+    the process default (F2P_PACKED env). Checkpoints written either way
+    restore transparently; pre-packing checkpoints have no flag and read as
+    unpacked."""
+    pk = QT.resolve_packed(packed)
     flat, _ = _flatten(tree)
     # leaves belonging to a QTensor are ALREADY a compressed wire format —
     # re-compressing the f32 scales leaf would be lossy-on-lossy and break
@@ -106,16 +120,16 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
                     "ckpt/" + path_from_keystr(name), (fmt, block))
             if (compress and arr.dtype.kind == "f" and arr.size >= min_size
                     and arr.shape and id(leaf) not in qt_children
-                    and _codec_shrinks(arr, leaf_blk, leaf_fmt)):
+                    and _codec_shrinks(arr, leaf_blk, leaf_fmt, packed=pk)):
                 # cap the block at the leaf's last dim: a 128-block on a
                 # narrow leaf would PAD codes up to 128 and balloon the file
                 leaf_block = min(leaf_blk, arr.shape[-1])
                 qt = QT.quantize(jnp.asarray(arr, jnp.float32), leaf_fmt,
-                                 block=leaf_block, backend="xla")
+                                 block=leaf_block, backend="xla", packed=pk)
                 payload = np.asarray(qt.codes).tobytes()
                 scales = np.asarray(qt.scales).tobytes()
                 entry.update(codec="qtensor", block=leaf_block,
-                             fmt=_fmt_meta(leaf_fmt),
+                             fmt=_fmt_meta(leaf_fmt), packed=pk,
                              codes_shape=list(qt.codes.shape),
                              scale_shape=list(qt.scales.shape))
                 entry["offset"], entry["nbytes"] = f.tell(), len(payload)
@@ -182,16 +196,19 @@ def load_policy(ckpt_dir: str, step: int | None = None):
 
 def _read_qtensor(e: dict, data: np.memmap) -> QTensor:
     """Reassemble a compressed leaf's QTensor (zero-copy from the mmap view
-    into device-placeable numpy; decode deferred to the caller)."""
+    into device-placeable numpy; decode deferred to the caller). Entries
+    from pre-packing checkpoints carry no ``packed`` flag and read as
+    byte-aligned codes — legacy restores stay bit-exact."""
     fmt = _fmt_from_meta(e["fmt"]) if "fmt" in e else CKPT_FMT
-    code_np = np.dtype(fmt.code_dtype)
+    packed = bool(e.get("packed", False))
+    code_np = np.dtype(np.uint32) if packed else np.dtype(fmt.code_dtype)
     raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
     codes = np.frombuffer(raw, code_np).reshape(
         e.get("codes_shape", e["shape"]))
     sraw = bytes(data[e["scale_offset"]:e["scale_offset"] + e["scale_nbytes"]])
     scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
     return QTensor.from_parts(jnp.asarray(codes), jnp.asarray(scales), fmt,
-                              e["block"], e["shape"])
+                              e["block"], e["shape"], packed=packed)
 
 
 def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
