@@ -49,8 +49,12 @@ _SUFFIXES = {"_us": "low", "_per_s": "high"}
 # tiny model whose per-token time swings ~5x on shared boxes (measured
 # 1.26-5.97 ms/token on unmodified code; DESIGN.md §9.4), far past any sane
 # threshold. The kernel/matmul/packed metrics stay gated: they are single
-# jitted calls whose medians hold within the 2.5x bar.
-_UNGATED_PREFIXES = ("table5_us", "table6_us", "serve.")
+# jitted calls whose medians hold within the 2.5x bar. The faulted-fleet
+# wall time is dominated by injected straggler delays and quarantine scans
+# (a chaos measurement, not a perf one) — trajectory-only; the fault-free
+# ``fl_fleet.fleet_round_us`` stays gated.
+_UNGATED_PREFIXES = ("table5_us", "table6_us", "serve.",
+                     "fl_fleet.fleet_faulted.")
 
 
 def flatten_metrics(entry: dict) -> dict[str, tuple[float, str]]:

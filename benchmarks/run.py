@@ -431,6 +431,54 @@ def bench_fl(quick=False, warmup=1, reps=3):
     return out
 
 
+def bench_fl_fleet(quick=False, warmup=1, reps=3):
+    """Fleet-scale FL round (ISSUE-6): 1000 clients, packed 8-bit deltas,
+    vmapped client chunks, exact integer aggregation. ``fleet_round_us`` is
+    the gated steady-state metric; the faulted/straggler variants are wall
+    times DOMINATED by injected behavior (quarantine scans, retry math), so
+    they are recorded ungated — same policy as serve decode."""
+    import dataclasses
+
+    from repro.faults import named_plan
+    from repro.fl import ClientConfig, FleetConfig, run_fleet_rounds, toy_task
+
+    task = toy_task(d_model=32, n_layers=1, vocab=256, seq_len=16, batch=2)
+    # acceptance pins the 1000-client round inside the quick budget, so the
+    # fleet size does not shrink under --quick; only the round count does
+    n = 1000
+    if quick:
+        reps = min(reps, 2)
+    ccfg = ClientConfig(local_steps=1, scale_mode="pow2",
+                        error_feedback=False, packed=True, min_size=512)
+    flcfg = FleetConfig(n_clients=n, sample=n, quorum=max(1, n // 2),
+                        rounds=1 + max(warmup, 0) + max(reps, 1),
+                        client=ccfg, client_batch=50)
+    hist = run_fleet_rounds(flcfg, task)
+    skip = 1 + max(warmup, 0)          # first round pays compile
+    tail = sorted(hist["round_seconds"][skip:])
+    round_us = tail[len(tail) // 2] * 1e6
+    wire = hist["wire_bytes_per_round"][-1]
+    out = {"n_clients": n, "fleet_round_us": round_us,
+           "wire_bytes_per_round": wire,
+           "bytes_per_client": wire / n,
+           "final_loss": hist["eval_loss"][-1]}
+    print(f"fl_fleet_round_{n}c,{round_us:.0f},wire_mb={wire/1e6:.2f}")
+
+    # faulted wall time: straggler/chaos dominated, trajectory-only
+    chaos = dataclasses.replace(flcfg, rounds=2, sample=min(n, 64),
+                                quorum=16)
+    fh = run_fleet_rounds(chaos, task, faults=named_plan("chaos-small"))
+    faulted_us = fh["round_seconds"][-1] * 1e6
+    out["fleet_faulted"] = {
+        "round_wall_us": faulted_us,
+        "sim_time_s": fh["sim_time"][-1],
+        "admitted": fh["admitted"][-1], "dropped": fh["dropped"][-1],
+        "quarantined": fh["quarantined"][-1]}
+    print(f"fleet_faulted_round_wall,{faulted_us:.0f},"
+          f"admitted={fh['admitted'][-1]}/{chaos.sample}")
+    return out
+
+
 def bench_autotune(quick=False, warmup=1, reps=3):
     """Autotune subsystem: streaming-calibration throughput, policy solve
     latency, and the calibrated-policy vs best-hardcoded-format MSE ratio
@@ -525,6 +573,7 @@ BENCHES = {
     "compression": bench_compression,
     "kv_quality": bench_kv_quality,
     "fl": bench_fl,
+    "fl_fleet": bench_fl_fleet,
     "autotune": bench_autotune,
 }
 
@@ -544,6 +593,7 @@ def _append_trajectory(results: dict, args) -> None:
         "serve": results.get("serve"),
         "sketch": results.get("sketch"),
         "fl": results.get("fl"),
+        "fl_fleet": results.get("fl_fleet"),
         "autotune": results.get("autotune"),
         "table5_us": (results.get("table5") or {}).get("us"),
         "table6_us": {k: v["us"] for k, v in
@@ -591,7 +641,7 @@ def main() -> None:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
     if {"host_encode", "kernels", "packed", "matmul", "serve", "sketch",
-            "fl", "autotune"} & set(names):
+            "fl", "fl_fleet", "autotune"} & set(names):
         _append_trajectory(results, args)
 
 

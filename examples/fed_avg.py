@@ -18,15 +18,61 @@ just moving representable points around inside a fixed byte budget.
 Set ``F2P_PACKED=1`` to flip every ``packed=None`` default in the repo (the
 CI smoke job does) — the f2p8 run then also ships packed (byte-identical for
 8-bit: 4 codes per uint32 word).
+
+Chaos mode (ISSUE 6): ``--faults chaos-small`` runs the straggler-tolerant
+fleet driver twice — fault-free and under a seeded FaultPlan (20% dropout,
+10% stragglers, NaN/bit-flip wire corruption) — and enforces by exit code
+that the faulted run lands within 1.05x the fault-free final loss and never
+commits a non-finite global model.
 """
 import argparse
+import math
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.fl import (AutotuneConfig, ClientConfig, FedAvgConfig, run_fed_avg,
-                      toy_task)
+from repro.fl import (AutotuneConfig, ClientConfig, FedAvgConfig, FleetConfig,
+                      run_fed_avg, run_fleet_rounds, toy_task)
+
+
+def run_chaos(args) -> int:
+    """Fault-free vs faulted fleet rounds on the same seeded cohort."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.faults import named_plan
+
+    task = toy_task()
+    ccfg = dataclasses.replace(FleetConfig().client,
+                               local_steps=args.local_steps, lr=args.lr)
+    flcfg = FleetConfig(n_clients=max(args.clients, 32),
+                        sample=max(args.clients, 32),
+                        quorum=max(args.clients, 32) // 4,
+                        rounds=args.rounds, client=ccfg)
+    print(f"--- fleet fault-free ({flcfg.sample} clients x "
+          f"{flcfg.rounds} rounds) ---")
+    clean = run_fleet_rounds(flcfg, task, verbose=True)
+    print(f"--- fleet under FaultPlan '{args.faults}' ---")
+    chaos = run_fleet_rounds(flcfg, task, faults=named_plan(args.faults),
+                             verbose=True)
+
+    finite = all(bool(jax.numpy.isfinite(leaf).all())
+                 for leaf in jax.tree.leaves(chaos["params"]))
+    ratio = chaos["eval_loss"][-1] / clean["eval_loss"][-1]
+    quarantined = int(np.sum(chaos["quarantined"]))
+    dropped = int(np.sum(chaos["dropped"]))
+    print("\nchaos summary:")
+    print(f"  final eval loss: clean {clean['eval_loss'][-1]:.4f} vs faulted "
+          f"{chaos['eval_loss'][-1]:.4f} ({ratio:.4f}x)")
+    print(f"  faulted run: {dropped} drops, {quarantined} quarantined "
+          f"updates, {int(np.sum(chaos['committed']))} committed rounds")
+    ok = ratio <= 1.05 and finite and math.isfinite(chaos["eval_loss"][-1])
+    print(f"  acceptance (<=1.05x fault-free loss, finite model): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
 
 
 def main():
@@ -37,7 +83,13 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--packed-budget", type=float, default=6.5,
                     help="bits/elem budget of the packed mixed 6/8 policy")
+    ap.add_argument("--faults", type=str, default="",
+                    help="run the fleet driver under this named FaultPlan "
+                         "(e.g. chaos-small) instead of the 3-way comparison")
     args = ap.parse_args()
+
+    if args.faults:
+        return run_chaos(args)
 
     task = toy_task()
     configs = {

@@ -49,6 +49,7 @@ from repro.core.f2p import F2PFormat
 from repro.kernels.bits import packed_nbytes, packed_words
 
 __all__ = ["QTensor", "quantize", "dequantize", "block_scales",
+           "pow2_round_up",
            "quantize_tree", "dequantize_tree", "packed_default",
            "resolve_packed"]
 
@@ -67,6 +68,23 @@ def resolve_packed(packed) -> bool:
     return packed_default() if packed is None else bool(packed)
 
 
+def pow2_round_up(scale: jnp.ndarray) -> jnp.ndarray:
+    """Smallest power of two >= ``scale``, BIT-EXACT in f32.
+
+    ``exp2(ceil(log2(x)))`` is NOT exact under jit: XLA lowers exp2 via
+    exp(x*ln2), whose rounding can land one ulp below the true power of two
+    — enough to break the exact-division contract pow2 scales exist for
+    (and the exact-aggregation codes path that depends on it). Operate on
+    the exponent bits instead: mantissa nonzero bumps the exponent,
+    subnormals flush up to 2^-126, the top caps at 2^127."""
+    bits = jax.lax.bitcast_convert_type(scale.astype(jnp.float32), jnp.uint32)
+    exp = (bits >> jnp.uint32(23)) & jnp.uint32(0xFF)
+    mant = bits & jnp.uint32(0x7FFFFF)
+    e = jnp.where(mant > 0, exp + jnp.uint32(1), exp)
+    e = jnp.clip(e, jnp.uint32(1), jnp.uint32(254))
+    return jax.lax.bitcast_convert_type(e << jnp.uint32(23), jnp.float32)
+
+
 def block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str = "f32"):
     """Per-block scales from ``[..., nblocks, block]`` f32 data.
 
@@ -80,8 +98,7 @@ def block_scales(xb: jnp.ndarray, fmt: F2PFormat, scale_mode: str = "f32"):
     # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
     scale = absmax * jnp.float32(1.0 / fmt.max_value)
     if scale_mode == "pow2":
-        # round scale UP to a power of two => exact division, deterministic
-        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+        scale = pow2_round_up(jnp.where(scale > 0, scale, 1.0))
     return jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
 
 

@@ -1,0 +1,156 @@
+"""Fault injection mechanics: wire-payload corruption, crash points, and the
+serve-engine wrapper.
+
+Everything here WRAPS the system under test — the FL round driver folds
+corrupted copies, ``crashpoint`` is a no-op dict probe unless a plan is
+installed, and ``wrap_engine`` proxies ``serve.Engine`` — so the hot paths
+(jitted client/step functions, the checkpoint writer's data loop) carry no
+fault logic at all.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+import numpy as np
+
+from repro.faults.plan import FaultPlan
+
+__all__ = ["CrashInjected", "TransientServeError", "DroppedRequest",
+           "crashpoint", "install", "uninstall", "active", "corrupt_update",
+           "FaultyEngine", "wrap_engine"]
+
+
+class CrashInjected(RuntimeError):
+    """Raised at an armed crash point (simulates the process dying there)."""
+
+
+class TransientServeError(RuntimeError):
+    """Retryable serve failure (injected): caller may retry the request."""
+
+
+class DroppedRequest(RuntimeError):
+    """The request was lost (injected): no response will ever arrive."""
+
+
+# ---------------------------------------------------------------------------
+# Crash points
+# ---------------------------------------------------------------------------
+# name -> remaining fires; None when no plan installed. Module-global on
+# purpose: the code under test (checkpoint.save) calls ``crashpoint(name)``
+# unconditionally, and that call must cost one dict probe when disarmed.
+_ARMED: dict[str, int] | None = None
+
+
+def install(plan: FaultPlan) -> None:
+    """Arm ``plan.crash_points`` (each fires once, then disarms)."""
+    global _ARMED
+    _ARMED = {name: 1 for name in plan.crash_points}
+
+
+def uninstall() -> None:
+    global _ARMED
+    _ARMED = None
+
+
+@contextlib.contextmanager
+def active(plan: FaultPlan):
+    """Context manager: crash points armed inside, always disarmed after."""
+    install(plan)
+    try:
+        yield plan
+    finally:
+        uninstall()
+
+
+def crashpoint(name: str) -> None:
+    """Raise :class:`CrashInjected` if ``name`` is armed. The production
+    no-op: one ``is None`` check."""
+    if _ARMED is None:
+        return
+    if _ARMED.get(name, 0) > 0:
+        _ARMED[name] -= 1
+        raise CrashInjected(name)
+
+
+# ---------------------------------------------------------------------------
+# Wire corruption
+# ---------------------------------------------------------------------------
+def _flip_one_bit(arr: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    out = np.array(arr)  # owned, writable copy
+    flat = out.reshape(-1).view(np.uint8)
+    if flat.size == 0:
+        return out
+    byte = int(rng.integers(flat.size))
+    bit = int(rng.integers(8))
+    flat[byte] ^= np.uint8(1 << bit)
+    return out
+
+
+def corrupt_update(update, kind: str, rng: np.random.Generator):
+    """A corrupted COPY of a wire update pytree (QTensor leaves included —
+    their codes/scales are ordinary pytree leaves).
+
+    ``"bitflip"`` flips one random bit in one random buffer: in packed or
+    8-bit codes that lands on a valid (wrong) code the gate cannot detect —
+    the realistic silent-corruption case aggregation must merely survive —
+    while a flip in a scales/raw float leaf usually produces a huge or
+    non-finite value the gate rejects. ``"nan"`` plants NaN (or Inf) in a
+    float leaf — the case the gate MUST quarantine."""
+    leaves, treedef = jax.tree.flatten(update)
+    arrs = [np.asarray(leaf) for leaf in leaves]
+    if kind == "bitflip":
+        idx = int(rng.integers(len(arrs)))
+        arrs[idx] = _flip_one_bit(arrs[idx], rng)
+    elif kind == "nan":
+        fidx = [i for i, a in enumerate(arrs) if a.dtype.kind == "f"]
+        if fidx:
+            idx = fidx[int(rng.integers(len(fidx)))]
+            out = np.array(arrs[idx])
+            pos = int(rng.integers(max(out.size, 1)))
+            out.reshape(-1)[pos] = np.nan if rng.random() < 0.5 else np.inf
+            arrs[idx] = out
+    else:
+        raise ValueError(f"unknown corruption kind {kind!r}")
+    return jax.tree.unflatten(treedef, arrs)
+
+
+# ---------------------------------------------------------------------------
+# Serve-engine wrapper
+# ---------------------------------------------------------------------------
+class FaultyEngine:
+    """Proxy around ``serve.Engine`` injecting per-request faults.
+
+    The engine itself is untouched (its jitted steps never see the plan);
+    the wrapper delays, drops, or transiently fails requests in front of it.
+    ``time_scale`` shrinks the plan's simulated-seconds delays to real
+    sleeps (tests use ~1e-3 so chaos runs stay instant)."""
+
+    def __init__(self, engine, plan: FaultPlan, *, time_scale: float = 1.0):
+        self.engine = engine
+        self.plan = plan
+        self.time_scale = float(time_scale)
+        self.requests = 0
+        self.stats = {"delayed": 0, "dropped": 0, "transient": 0}
+
+    def generate(self, prompts, max_new: int, eos: int = -1):
+        req = self.requests
+        self.requests += 1
+        f = self.plan.client_fault(0, req)  # domain-shared draws: fine —
+        # request index plays the client role, round is always 0
+        if f.dropped:
+            self.stats["dropped"] += 1
+            raise DroppedRequest(f"request {req} lost (injected)")
+        if f.delay > 0:
+            self.stats["delayed"] += 1
+            time.sleep(f.delay * self.time_scale)
+        if f.transient_failures > 0:
+            self.stats["transient"] += 1
+            raise TransientServeError(
+                f"request {req}: transient failure (injected); retry")
+        return self.engine.generate(prompts, max_new, eos=eos)
+
+
+def wrap_engine(engine, plan: FaultPlan, *, time_scale: float = 1.0):
+    return FaultyEngine(engine, plan, time_scale=time_scale)

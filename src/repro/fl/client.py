@@ -53,6 +53,11 @@ class ClientConfig:
     # format then really costs 6 bits/elem. None defers to the process
     # default (F2P_PACKED env).
     packed: bool | None = None
+    # "pow2" rounds each block scale UP to a power of two — the contract
+    # the exact integer aggregator's codes path needs (DESIGN.md §10).
+    # "f32" keeps the legacy tightest-fit scales (server falls back to
+    # deterministic fixed-point folding, still order-invariant).
+    scale_mode: str = "f32"
 
 
 def leaf_wire_bytes(lead_rows: int, npad: int, block: int, fmt: F2PFormat,
@@ -125,7 +130,8 @@ def _quantize_delta(delta, residuals, ccfg: ClientConfig):
         din = d + (r if r is not None else 0.0)
         # block already capped at the leaf's last dim: a 128-block on a
         # 32-wide leaf would pad codes 4x and erase the wire win
-        qt = QT.quantize(din, fmt, block=blk, packed=packed)
+        qt = QT.quantize(din, fmt, block=blk, packed=packed,
+                         scale_mode=ccfg.scale_mode)
         ups.append(qt)
         res.append(din - qt.dequantize(jnp.float32) if r is not None else r)
     return td.unflatten(ups), jax.tree.unflatten(rtd, res)

@@ -80,15 +80,24 @@ def toy_task(*, d_model: int = 64, n_layers: int = 2, vocab: int = 512,
     return cfg, dcfg, loss_fn, init_params
 
 
-def _client_batches(dcfg, fcfg: FedAvgConfig, round_i: int, client_i: int):
-    """Stacked [local_steps] batch pytree for one client round. Each client
-    reads a disjoint slice of the deterministic step-indexed stream."""
+def _client_stream(dcfg, local_steps: int, round_i: int, client_id: int):
+    """Stacked [local_steps] batch pytree for one client round.
+
+    The stream base depends ONLY on (client_id, round) — never on loop
+    position or fleet size — so dropping, resampling, or reordering clients
+    cannot shift any other client's data (the prerequisite for reproducible
+    fault experiments). Client bases sit at ``(id+1) * 2^20``: disjoint per
+    client for < 2^20 round-steps, and far above the held-out eval batch
+    index 1_000_003 < 2^20."""
     from repro.data import global_batch
 
-    steps = fcfg.client.local_steps
-    idx0 = (round_i * steps) * fcfg.n_clients + client_i
-    bs = [global_batch(dcfg, idx0 + s * fcfg.n_clients) for s in range(steps)]
+    idx0 = (client_id + 1) * (1 << 20) + round_i * local_steps
+    bs = [global_batch(dcfg, idx0 + s) for s in range(local_steps)]
     return {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
+
+
+def _client_batches(dcfg, fcfg: FedAvgConfig, round_i: int, client_i: int):
+    return _client_stream(dcfg, fcfg.client.local_steps, round_i, client_i)
 
 
 def _solve_policy(calib: dict, meta: dict, fcfg: FedAvgConfig):
@@ -200,5 +209,233 @@ def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
                   f"client_loss {hist['client_loss'][-1]:.4f} "
                   f"wire {hist['wire_bytes_per_round'][-1]/1e6:.2f} MB "
                   f"({hist['round_seconds'][-1]:.2f}s)", flush=True)
+    hist["params"] = params
+    return hist
+
+
+# ===========================================================================
+# Fleet-scale straggler-tolerant rounds (DESIGN.md §10)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Straggler-tolerant fed-avg over a large unreliable fleet.
+
+    Each round samples ``sample`` of ``n_clients`` (over-provisioned: only
+    ``quorum`` need arrive), computes client updates in vmapped chunks of
+    ``client_batch``, and runs a SIMULATED clock: per-client arrival time =
+    compute + straggler delay + retry backoff, arrivals after ``deadline``
+    are buffered and folded into the NEXT round with staleness-discounted
+    integer weights ``max(1, round(gamma^age * 2^weight_unit_bits))``,
+    expiring after ``max_staleness`` rounds. Aggregation is the exact
+    integer path (``fl.exact``), so the committed model is bit-identical
+    under any arrival order or partial-aggregation schedule. A round
+    commits only with >= ``quorum`` folded updates; otherwise arrivals
+    carry over and the model stands still (graceful degradation, reported
+    per round)."""
+
+    n_clients: int = 1000
+    sample: int = 64
+    quorum: int = 32
+    rounds: int = 3
+    client: C.ClientConfig = C.ClientConfig(scale_mode="pow2",
+                                            error_feedback=False)
+    server_lr: float = 1.0
+    seed: int = 0
+    # --- simulated time (seconds on the fleet's virtual clock) -------------
+    compute_time: float = 1.0
+    deadline: float = 8.0
+    max_retries: int = 2
+    backoff: float = 0.5          # retry k waits backoff * 2^(k-1)
+    # --- staleness ----------------------------------------------------------
+    staleness_gamma: float = 0.5
+    max_staleness: int = 2
+    weight_unit_bits: int = 8
+    # --- compute scaling ----------------------------------------------------
+    client_batch: int = 16        # vmap chunk width
+    shard_clients: bool = True    # shard the chunk axis when devices > 1
+
+
+def _slice_lane(tree, i: int):
+    """Lane ``i`` of a stacked update/residual pytree. QTensor is a pytree
+    node whose aux (fmt/block/shape) stays unbatched under vmap, so mapping
+    the array leaves recovers a per-client QTensor directly."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _maybe_shard(tree, flcfg: FleetConfig):
+    if not flcfg.shard_clients or len(jax.devices()) <= 1:
+        return tree
+    try:
+        from repro.launch.mesh import make_host_mesh
+
+        n = len(jax.devices())
+        if flcfg.client_batch % n != 0:
+            return tree
+        mesh = make_host_mesh(n, "clients")
+        sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("clients"))
+        return jax.device_put(tree, sh)
+    except Exception:
+        return tree  # sharding is an optimization, never a correctness gate
+
+
+def run_fleet_rounds(flcfg: FleetConfig, task=None, *, faults=None,
+                     verbose: bool = False):
+    """Run fleet rounds under an optional :class:`repro.faults.FaultPlan`.
+
+    Returns a history dict: per-round ``eval_loss``, ``committed``,
+    ``admitted`` / ``late_folded`` / ``dropped`` / ``failed`` (retries
+    exhausted) / ``quarantined`` / ``dup_skipped`` / ``expired`` /
+    ``retries``, ``wire_bytes_per_round`` (every delivered payload, counted
+    by the canonical packed accounting), ``sim_time`` (virtual clock) and
+    ``round_seconds`` (wall), plus final ``params``."""
+    from repro.faults import FaultPlan, corrupt_update
+    from repro.fl.exact import (ExactAggregator, UpdateRejected,
+                                validate_update)
+
+    plan = faults if faults is not None else FaultPlan()
+    cfg, dcfg, loss_fn, init_params_fn = task or toy_task()
+    params = init_params_fn(cfg, jax.random.PRNGKey(flcfg.seed))
+    ccfg = flcfg.client
+    chunk = max(1, flcfg.client_batch)
+    client_fn = jax.jit(jax.vmap(C.make_client_update(loss_fn, ccfg),
+                                 in_axes=(None, 0, 0)))
+    apply_fn = jax.jit(
+        lambda p, d: S.apply_update(p, d, server_lr=flcfg.server_lr))
+    eval_fn = jax.jit(loss_fn)
+    from repro.data import global_batch
+
+    eval_batch = {k: jnp.asarray(v)
+                  for k, v in global_batch(dcfg, 1_000_003).items()}
+    zero_res = C.init_client_residuals(params, ccfg)
+    res_store: dict[int, Any] = {}   # only populated with error_feedback
+    unit = 1 << flcfg.weight_unit_bits
+    late_buf: list[tuple[int, int, Any]] = []   # (emit_round, cid, update)
+
+    hist: dict[str, Any] = {k: [] for k in (
+        "eval_loss", "committed", "admitted", "late_folded", "dropped",
+        "failed", "quarantined", "dup_skipped", "expired", "retries",
+        "wire_bytes_per_round", "sim_time", "round_seconds")}
+
+    for r in range(flcfg.rounds):
+        t0 = time.perf_counter()
+        srng = np.random.default_rng(
+            np.random.SeedSequence([flcfg.seed, 101, r]))
+        n_s = min(flcfg.sample, flcfg.n_clients)
+        cids = sorted(srng.choice(flcfg.n_clients, size=n_s,
+                                  replace=False).tolist())
+
+        # ---- vmapped client compute over fixed-width chunks ---------------
+        updates: dict[int, Any] = {}
+        padded = cids + [cids[-1]] * (-len(cids) % chunk)
+        for i0 in range(0, len(padded), chunk):
+            batch_cids = padded[i0:i0 + chunk]
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_client_stream(dcfg, ccfg.local_steps, r, cid)
+                  for cid in batch_cids])
+            res_in = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[res_store.get(cid, zero_res) for cid in batch_cids])
+            batches = _maybe_shard(batches, flcfg)
+            upd, new_res, _ = client_fn(params, res_in, batches)
+            upd = jax.tree.map(np.asarray, upd)  # host copies for the wire
+            for j, cid in enumerate(batch_cids):
+                if cid in updates:
+                    continue  # pad lane (duplicate of the chunk tail)
+                updates[cid] = _slice_lane(upd, j)
+                if ccfg.error_feedback and ccfg.compress:
+                    res_store[cid] = _slice_lane(new_res, j)
+
+        # ---- simulated delivery under the fault plan -----------------------
+        st = {k: 0 for k in ("dropped", "failed", "retries", "admitted",
+                             "late_folded", "quarantined", "dup_skipped",
+                             "expired")}
+        deliveries = []   # (arrival_time, emit_round, cid, update)
+        for cid in cids:
+            f = plan.client_fault(r, cid)
+            if f.dropped:
+                st["dropped"] += 1
+                continue
+            if f.transient_failures > flcfg.max_retries:
+                st["failed"] += 1
+                continue
+            st["retries"] += f.transient_failures
+            t_arr = flcfg.compute_time + f.delay + sum(
+                flcfg.backoff * 2.0 ** k
+                for k in range(f.transient_failures))
+            u = updates[cid]
+            if f.corrupt is not None:
+                u = corrupt_update(u, f.corrupt, plan.rng("corrupt", r, cid))
+            for d in range(1 + f.duplicates):
+                deliveries.append((t_arr + 1e-3 * d, r, cid, u))
+        for er, cid, u in late_buf:
+            if r - er > flcfg.max_staleness:
+                st["expired"] += 1
+                continue
+            deliveries.append((0.0, er, cid, u))   # buffered: ready at start
+        late_buf = []
+
+        deliveries.sort(key=lambda a: (a[0], a[1], a[2]))
+        admit = [a for a in deliveries if a[0] <= flcfg.deadline]
+        late = [a for a in deliveries if a[0] > flcfg.deadline]
+
+        # ---- fold (order-invariant: reorder cannot change the bits) --------
+        agg = ExactAggregator()
+        seen: set[tuple[int, int]] = set()
+        wire = 0
+        for k in plan.arrival_order(r, len(admit)):
+            t_arr, er, cid, u = admit[k]
+            wire += S.wire_bytes(u)
+            if (er, cid) in seen:
+                st["dup_skipped"] += 1
+                continue
+            seen.add((er, cid))
+            age = r - er
+            try:
+                validate_update(u)
+                agg.add(u, max(1, round(flcfg.staleness_gamma ** age * unit))
+                        if age else unit)
+            except UpdateRejected as e:
+                st["quarantined"] += 1
+                if verbose:
+                    print(f"round {r}: quarantined client {cid}: {e}",
+                          flush=True)
+                continue
+            st["admitted"] += 1
+            if age:
+                st["late_folded"] += 1
+
+        committed = agg.n_folded >= flcfg.quorum
+        if committed:
+            params = apply_fn(params, jax.tree.map(jnp.asarray,
+                                                   agg.finalize()))
+        else:
+            # graceful degradation: the model stands still; everything that
+            # DID arrive re-folds next round at age+1 (staleness-discounted)
+            for k in sorted(seen):
+                er, cid = k
+                u = next(u for _, e2, c2, u in admit
+                         if (e2, c2) == (er, cid))
+                late_buf.append((er, cid, u))
+        late_buf.extend((er, cid, u) for _, er, cid, u in late)
+
+        jax.block_until_ready(params)
+        ev = float(eval_fn(params, eval_batch))
+        sim = max([a[0] for a in admit], default=0.0)
+        hist["eval_loss"].append(ev)
+        hist["committed"].append(committed)
+        for key in st:
+            hist[key].append(st[key])
+        hist["wire_bytes_per_round"].append(int(wire))
+        hist["sim_time"].append(float(sim))
+        hist["round_seconds"].append(time.perf_counter() - t0)
+        if verbose:
+            print(f"round {r}: eval_loss {ev:.4f} committed={committed} "
+                  f"admitted {st['admitted']} (late {st['late_folded']}) "
+                  f"dropped {st['dropped']} failed {st['failed']} "
+                  f"quarantined {st['quarantined']} "
+                  f"wire {wire / 1e6:.2f} MB sim {sim:.2f}s "
+                  f"({hist['round_seconds'][-1]:.2f}s wall)", flush=True)
     hist["params"] = params
     return hist

@@ -8,6 +8,13 @@ LUT path (an exact upcast — every 8-bit F2P value fits even bf16's 8-bit
 significand, let alone f32), and the weighted contributions accumulate in
 f32. Uncompressed leaves take the plain weighted-sum path. Everything is
 jittable.
+
+Float accumulation is order-DEPENDENT, which matters once arrivals are
+async: ``fl.exact`` (re-exported here) accumulates integer codes in int64
+on the shared F2P grid instead — bit-identical results under any client
+permutation, partial-arrival batching, or host, with one decode at the end.
+The fleet driver (``fl.rounds.run_fleet_rounds``) uses it by default; this
+float path remains the default for the legacy ``run_fed_avg``.
 """
 from __future__ import annotations
 
@@ -17,6 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
+from repro.fl.exact import (AggregationOverflow, ExactAggregator,  # noqa: F401
+                            UpdateRejected, aggregate_exact, validate_update)
 
 _is_q = lambda x: isinstance(x, QTensor)  # noqa: E731
 

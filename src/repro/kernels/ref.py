@@ -42,8 +42,11 @@ def _scales(x32: jnp.ndarray, fmt: F2PFormat, block: int, scale_mode: str):
     # anyway under jit; doing it explicitly keeps eager == jit == pallas bitwise
     scale = absmax * jnp.float32(1.0 / fmt.max_value)
     if scale_mode == "pow2":
-        # round scale UP to a power of two => exact division, deterministic
-        scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.where(scale > 0, scale, 1.0))))
+        # bit-exact power-of-two rounding (core.qtensor owns the math;
+        # exp2(ceil(log2(x))) under jit can land one ulp off a true pow2)
+        from repro.core.qtensor import pow2_round_up
+
+        scale = pow2_round_up(jnp.where(scale > 0, scale, 1.0))
     scale = jnp.where(absmax > 0, scale, 1.0).astype(jnp.float32)
     return xb, scale
 

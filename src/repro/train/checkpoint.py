@@ -26,6 +26,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any
 
 import jax
@@ -35,9 +36,36 @@ import numpy as np
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
 from repro.core.qtensor import QTensor
+from repro.faults.inject import crashpoint
 from repro.kernels.bits import packed_nbytes
 
 CKPT_FMT = F2PFormat(n_bits=16, h_bits=2, flavor=Flavor.SR, signed=True)
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A committed checkpoint failed integrity checks on read (truncated
+    buffer or per-leaf checksum mismatch) — a clear error instead of
+    silently restoring garbage weights."""
+
+
+def _fsync_file(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """Durability for the rename itself; best-effort (some filesystems
+    refuse to open directories)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _fmt_meta(fmt: F2PFormat) -> dict:
@@ -133,25 +161,35 @@ def save(ckpt_dir: str, step: int, tree: Any, *, compress: bool = False,
                              codes_shape=list(qt.codes.shape),
                              scale_shape=list(qt.scales.shape))
                 entry["offset"], entry["nbytes"] = f.tell(), len(payload)
+                entry["crc"] = zlib.crc32(payload)
                 f.write(payload)
                 entry["scale_offset"], entry["scale_nbytes"] = f.tell(), len(scales)
+                entry["scale_crc"] = zlib.crc32(scales)
                 f.write(scales)
             else:
                 payload = arr.tobytes()
                 entry.update(codec="raw")
                 entry["offset"], entry["nbytes"] = f.tell(), len(payload)
+                entry["crc"] = zlib.crc32(payload)
                 f.write(payload)
             index[name] = entry
+        _fsync_file(f)
+    crashpoint("ckpt.data_written")
     with open(os.path.join(tmp, "index.json"), "w") as f:
         json.dump({"step": step, "leaves": index}, f)
+        _fsync_file(f)
     if policy is not None:
         with open(os.path.join(tmp, "policy.json"), "w") as f:
             f.write(policy.to_json())
+            _fsync_file(f)
     with open(os.path.join(tmp, "COMMITTED"), "w") as f:
         f.write("ok")
+        _fsync_file(f)
+    crashpoint("ckpt.before_commit")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)
     _prune(ckpt_dir, keep)
     return final
 
@@ -160,6 +198,12 @@ def _prune(ckpt_dir: str, keep: int):
     steps = sorted(all_steps(ckpt_dir))
     for s in steps[:-keep] if keep else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    # stale tmp dirs from crashed writes (the crash left no COMMITTED marker,
+    # so they can never be restored from — just disk to reclaim)
+    if os.path.isdir(ckpt_dir):
+        for d in os.listdir(ckpt_dir):
+            if d.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def all_steps(ckpt_dir: str):
@@ -194,18 +238,37 @@ def load_policy(ckpt_dir: str, step: int | None = None):
         return FormatPolicy.from_json(f.read())
 
 
-def _read_qtensor(e: dict, data: np.memmap) -> QTensor:
-    """Reassemble a compressed leaf's QTensor (zero-copy from the mmap view
-    into device-placeable numpy; decode deferred to the caller). Entries
-    from pre-packing checkpoints carry no ``packed`` flag and read as
-    byte-aligned codes — legacy restores stay bit-exact."""
+def _read_span(data: np.memmap, name: str, offset: int, nbytes: int,
+               crc: int | None, what: str = "payload") -> bytes:
+    """One integrity-checked byte span: truncation is detected against the
+    mmap length, bit rot against the stored crc32. Entries from pre-checksum
+    checkpoints carry no crc and skip the verify (legacy restores keep
+    working)."""
+    if offset + nbytes > data.size:
+        raise CheckpointCorrupt(
+            f"{name}: {what} [{offset}:{offset + nbytes}] exceeds data.bin "
+            f"({data.size} bytes) — truncated write")
+    raw = bytes(data[offset:offset + nbytes])
+    if crc is not None and zlib.crc32(raw) != crc:
+        raise CheckpointCorrupt(
+            f"{name}: {what} checksum mismatch (stored {crc:#010x}, "
+            f"read {zlib.crc32(raw):#010x}) — corrupted buffer")
+    return raw
+
+
+def _read_qtensor(name: str, e: dict, data: np.memmap) -> QTensor:
+    """Reassemble a compressed leaf's QTensor (decode deferred to the
+    caller). Entries from pre-packing checkpoints carry no ``packed`` flag
+    and read as byte-aligned codes — legacy restores stay bit-exact."""
     fmt = _fmt_from_meta(e["fmt"]) if "fmt" in e else CKPT_FMT
     packed = bool(e.get("packed", False))
     code_np = np.dtype(np.uint32) if packed else np.dtype(fmt.code_dtype)
-    raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
+    raw = _read_span(data, name, e["offset"], e["nbytes"], e.get("crc"),
+                     "codes")
     codes = np.frombuffer(raw, code_np).reshape(
         e.get("codes_shape", e["shape"]))
-    sraw = bytes(data[e["scale_offset"]:e["scale_offset"] + e["scale_nbytes"]])
+    sraw = _read_span(data, name, e["scale_offset"], e["scale_nbytes"],
+                      e.get("scale_crc"), "scales")
     scales = np.frombuffer(sraw, np.float32).reshape(e["scale_shape"])
     return QTensor.from_parts(jnp.asarray(codes), jnp.asarray(scales), fmt,
                               e["block"], e["shape"], packed=packed)
@@ -231,11 +294,11 @@ def restore(ckpt_dir: str, tree_like: Any, step: int | None = None,
     def read(name, like):
         e = index[name]
         if e["codec"] in ("qtensor", "f2p16"):  # f2p16: pre-QTensor name
-            qt = _read_qtensor(e, data)
+            qt = _read_qtensor(name, e, data)
             if lazy:
                 return qt
             return np.asarray(qt.dequantize(backend="xla")).astype(e["dtype"])
-        raw = bytes(data[e["offset"]:e["offset"] + e["nbytes"]])
+        raw = _read_span(data, name, e["offset"], e["nbytes"], e.get("crc"))
         return np.frombuffer(raw, e["dtype"]).reshape(e["shape"]).copy()
 
     flat_out = {}

@@ -1,0 +1,280 @@
+"""Bit-exact order-invariant aggregation (fl.exact, DESIGN.md §10).
+
+The ISSUE-6 acceptance core: aggregating a 32-client round of packed pow2
+F2P8 updates must produce bit-identical results under >= 5 client
+permutations and >= 3 async partial-arrival schedules (add / add_batch /
+merge splits); the codes path must equal one f64 exact sum rounded once to
+f32; overflow/validation failures must raise, never wrap or poison."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hypofallback import given, settings, st
+
+from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
+from repro.fl.exact import (AggregationOverflow, ExactAggregator,
+                            UpdateRejected, aggregate_exact, grid_ints,
+                            validate_update)
+
+FMT8 = F2PFormat(8, 2, Flavor.SR, signed=True)
+FMT6 = F2PFormat(6, 2, Flavor.SR, signed=True)
+
+
+def _update(seed: int, *, packed: bool = True, scale_mode: str = "pow2"):
+    """One client update pytree: a quantized matrix leaf + a raw bias."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.02, size=(4, 96)).astype(np.float32)
+    b = rng.normal(0, 0.001, size=(24,)).astype(np.float32)
+    return {"w": QT.quantize(jnp.asarray(w), FMT8, block=32, packed=packed,
+                             scale_mode=scale_mode),
+            "b": b}
+
+
+def _bits_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# grid_ints: the exact integer view of the F2P grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [
+    F2PFormat(6, 2, Flavor.SR, signed=True),
+    F2PFormat(8, 2, Flavor.SR, signed=True),
+    F2PFormat(8, 1, Flavor.SI, signed=False),
+    F2PFormat(10, 2, Flavor.SR, signed=True),
+    F2PFormat(12, 2, Flavor.SR, signed=True),
+    F2PFormat(16, 2, Flavor.SR, signed=True),
+])
+def test_grid_ints_exact(fmt):
+    gi = grid_ints(fmt)
+    assert gi is not None
+    ivals, emin = gi
+    codes = np.arange(1 << fmt.n_bits, dtype=np.int64)
+    dec = fmt.decode_payload(codes & ((1 << fmt.payload_bits) - 1))
+    if fmt.signed:
+        sign = (codes >> fmt.payload_bits) & 1
+        dec = np.where(sign == 1, -dec, dec)
+    np.testing.assert_array_equal(
+        np.ldexp(ivals.astype(np.float64), emin), dec)
+
+
+def test_grid_ints_wide_format_falls_back():
+    # h=3 ranges span far past 32 bits of integer grid -> fixed-point path
+    assert grid_ints(F2PFormat(12, 3, Flavor.SR, signed=True)) is None
+
+
+def test_pow2_round_up_bit_exact_under_jit():
+    """The codes-path contract: block_scales('pow2') must emit EXACT powers
+    of two, jit or eager — XLA's exp2 lowering is 1 ulp off a true pow2."""
+    rng = np.random.default_rng(0)
+    s = np.concatenate([
+        rng.uniform(1e-30, 1e30, 500).astype(np.float32),
+        np.exp2(rng.integers(-100, 100, 200)).astype(np.float32),
+        np.float32([1.0, 2.0, 0.5, 3e-38, 1e38])])
+    s = jnp.asarray(np.abs(s))
+    for out in (QT.pow2_round_up(s), jax.jit(QT.pow2_round_up)(s)):
+        o = np.asarray(out, np.float64)
+        m, _ = np.frexp(o)
+        assert np.all(m == 0.5), "not an exact power of two"
+        assert np.all(o >= np.asarray(s, np.float64) * (1 - 1e-7))
+        # smallest such power: halving any rounded-up scale undershoots
+        above = o > np.asarray(s, np.float64)
+        assert np.all(o[above] / 2 < np.asarray(s, np.float64)[above])
+    np.testing.assert_array_equal(np.asarray(QT.pow2_round_up(s)),
+                                  np.asarray(jax.jit(QT.pow2_round_up)(s)))
+
+
+# ---------------------------------------------------------------------------
+# permutation invariance (acceptance: >= 5 permutations, 32 clients)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("packed", [True, False])
+def test_32_client_permutation_invariance(packed):
+    ups = [_update(s, packed=packed) for s in range(32)]
+    ws = [1 + (s % 5) for s in range(32)]
+    ref = aggregate_exact(ups, ws, weight_unit_bits=8)
+    rng = np.random.default_rng(123)
+    for trial in range(5):
+        perm = rng.permutation(32)
+        out = aggregate_exact([ups[i] for i in perm],
+                              [ws[i] for i in perm], weight_unit_bits=8)
+        _bits_equal(ref, out)
+
+
+def test_mixed_codes_and_fallback_leaves_invariant():
+    """f32-scaled (fallback) and pow2-scaled (codes path) leaves in one tree
+    still aggregate order-invariantly — fixed-point rounding happens per
+    contribution, before any order-dependent state."""
+    ups = [_update(s, scale_mode="f32") for s in range(8)]
+    ref = aggregate_exact(ups)
+    for perm in ([3, 1, 4, 0, 7, 5, 2, 6], [7, 6, 5, 4, 3, 2, 1, 0]):
+        _bits_equal(ref, aggregate_exact([ups[i] for i in perm]))
+
+
+# ---------------------------------------------------------------------------
+# async partial-arrival schedules (acceptance: >= 3 schedules)
+# ---------------------------------------------------------------------------
+def test_partial_arrival_schedules_bit_identical():
+    ups = [_update(s) for s in range(32)]
+    w = 256
+
+    def sequential():
+        agg = ExactAggregator()
+        for u in ups:
+            agg.add(u, w)
+        return agg
+
+    def batched_chunks():
+        # the vmapped-fleet shape: stacked chunks of 8, weight-0 pad lanes
+        agg = ExactAggregator()
+        for i0 in range(0, 32, 8):
+            chunk = ups[i0:i0 + 8] + [ups[i0]]          # pad lane
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk,
+                                   is_leaf=lambda x: x is None)
+            agg.add_batch(stacked, [w] * 8 + [0])       # pad folds as 0
+        return agg
+
+    def sharded_merge():
+        # three async shards accumulate independently, merge out of order
+        shards = [ExactAggregator() for _ in range(3)]
+        for i, u in enumerate(ups):
+            shards[i % 3].add(u, w)
+        agg = ExactAggregator()
+        for s in (shards[2], shards[0], shards[1]):
+            agg.merge(s)
+        return agg
+
+    def straggler_split():
+        # 29 on time, 3 late and merged afterwards from a second shard
+        agg = ExactAggregator()
+        for u in ups[:29]:
+            agg.add(u, w)
+        late = ExactAggregator()
+        for u in ups[29:]:
+            late.add(u, w)
+        agg.merge(late)
+        return agg
+
+    ref = sequential().finalize()
+    for schedule in (batched_chunks, sharded_merge, straggler_split):
+        _bits_equal(ref, schedule().finalize())
+
+
+# ---------------------------------------------------------------------------
+# exactness: one rounding at the final decode
+# ---------------------------------------------------------------------------
+def test_codes_path_equals_f64_exact_mean():
+    ups = [_update(s) for s in range(16)]
+    ws = [256] * 16
+    out = aggregate_exact(ups, ws)
+    deq = [np.asarray(u["w"].dequantize(), np.float64) for u in ups]
+    exact = sum(d * 256 for d in deq) / (256 * 16)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  exact.astype(np.float32))
+
+
+def test_weight_zero_is_exact_noop():
+    ups = [_update(s) for s in range(4)]
+    agg = ExactAggregator()
+    for u in ups:
+        agg.add(u, 16)
+    ref = agg.finalize()
+    agg2 = ExactAggregator()
+    for u in ups:
+        agg2.add(u, 16)
+    agg2.add(_update(99), 0)     # weight 0: must not perturb a single bit
+    assert agg2.n_folded == 4
+    _bits_equal(ref, agg2.finalize())
+
+
+# ---------------------------------------------------------------------------
+# failure modes: raise, never wrap
+# ---------------------------------------------------------------------------
+def test_overflow_raises_not_wraps():
+    lo = {"x": np.float32([1e-30, 1e-30])}
+    hi = {"x": np.float32([1e30, 1e30])}
+    agg = ExactAggregator()
+    agg.add(lo, 1)
+    with pytest.raises(AggregationOverflow):
+        agg.add(hi, 1)
+
+
+def test_validation_gate_rejects_poison():
+    u = _update(0, packed=False)
+    validate_update(u)   # clean passes
+
+    bad_scale = {"w": QT.QTensor(u["w"].codes,
+                                 jnp.asarray(np.asarray(u["w"].scales)
+                                             * np.nan),
+                                 u["w"].fmt, u["w"].block, u["w"].shape,
+                                 u["w"].packed),
+                 "b": u["b"]}
+    with pytest.raises(UpdateRejected, match="non-finite scales"):
+        validate_update(bad_scale)
+
+    bad_b = dict(u, b=np.float32([np.inf] * 24))
+    with pytest.raises(UpdateRejected, match="non-finite delta"):
+        validate_update(bad_b)
+
+    # 6-bit codes in a uint8 container: value 255 is out of format range
+    q6 = QT.quantize(jnp.asarray(np.ones((4, 96), np.float32)), FMT6,
+                     block=32, packed=False)
+    oob = QT.QTensor(jnp.full_like(q6.codes, 255), q6.scales, q6.fmt,
+                     q6.block, q6.shape, q6.packed)
+    with pytest.raises(UpdateRejected, match="out of range"):
+        validate_update({"w": oob, "b": u["b"]})
+
+
+def test_structure_and_shape_guards():
+    agg = ExactAggregator()
+    agg.add(_update(0), 1)
+    with pytest.raises(UpdateRejected):
+        agg.add({"w": _update(1)["w"]}, 1)           # missing leaf
+    with pytest.raises(UpdateRejected):
+        agg.add({"w": _update(1)["w"], "b": np.zeros(7, np.float32)}, 1)
+    with pytest.raises(UpdateRejected):
+        agg.add(_update(1), (1 << 24) + 1)   # weight above MAX_WEIGHT
+
+
+def test_finalize_empty_raises():
+    with pytest.raises(ValueError):
+        ExactAggregator().finalize()
+    with pytest.raises(ValueError):
+        aggregate_exact([])
+
+
+# ---------------------------------------------------------------------------
+# property: invariance over random trees / weights / permutations
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=2, max_value=7),
+       packed=st.sampled_from([True, False]))
+def test_property_permutation_invariance(seed, n, packed):
+    rng = np.random.default_rng(seed)
+    ups, ws = [], []
+    for i in range(n):
+        x = rng.normal(0, rng.uniform(1e-4, 10.0),
+                       size=(2, 64)).astype(np.float32)
+        ups.append({"w": QT.quantize(jnp.asarray(x), FMT8, block=32,
+                                     packed=packed, scale_mode="pow2"),
+                    "b": rng.normal(0, 1, size=(8,)).astype(np.float32)})
+        ws.append(int(rng.integers(1, 1000)))
+    ref = aggregate_exact(ups, ws, weight_unit_bits=10)
+    for perm in itertools.islice(itertools.permutations(range(n)), 1, 4):
+        out = aggregate_exact([ups[i] for i in perm],
+                              [ws[i] for i in perm], weight_unit_bits=10)
+        _bits_equal(ref, out)

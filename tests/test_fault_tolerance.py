@@ -5,6 +5,7 @@ import subprocess
 import sys
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -68,3 +69,96 @@ def test_async_checkpointer_never_blocks_train_thread(tmp_path):
     assert enqueue_time < 0.5  # device->host snapshot only
     ck.wait()
     ck.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability (ISSUE 6): checksums, truncation, crash points
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"w": jnp.arange(64 * 1024, dtype=jnp.float32).reshape(256, 256),
+            "b": jnp.full((32,), 2.5)}
+
+
+def test_checkpoint_crc_detects_bitrot(tmp_path):
+    from repro.train import checkpoint
+
+    d = str(tmp_path)
+    checkpoint.save(d, 0, _tree(), keep=0)
+    data = os.path.join(d, "step_0", "data.bin")
+    with open(data, "r+b") as f:
+        f.seek(1234)
+        byte = f.read(1)
+        f.seek(1234)
+        f.write(bytes([byte[0] ^ 0x10]))
+    with np.testing.assert_raises_regex(checkpoint.CheckpointCorrupt,
+                                        "checksum mismatch"):
+        checkpoint.restore(d, _tree())
+
+
+def test_checkpoint_truncation_detected(tmp_path):
+    from repro.train import checkpoint
+
+    d = str(tmp_path)
+    checkpoint.save(d, 0, _tree(), keep=0)
+    data = os.path.join(d, "step_0", "data.bin")
+    with open(data, "r+b") as f:
+        f.truncate(os.path.getsize(data) // 2)
+    with np.testing.assert_raises_regex(checkpoint.CheckpointCorrupt,
+                                        "truncated"):
+        checkpoint.restore(d, _tree())
+
+
+def test_checkpoint_crc_detects_bitrot_in_compressed_payload(tmp_path):
+    from repro.train import checkpoint
+
+    d = str(tmp_path)
+    checkpoint.save(d, 0, _tree(), keep=0, compress=True, min_size=1024)
+    with open(os.path.join(d, "step_0", "data.bin"), "r+b") as f:
+        f.seek(100)
+        byte = f.read(1)
+        f.seek(100)
+        f.write(bytes([byte[0] ^ 0x01]))
+    with np.testing.assert_raises_regex(checkpoint.CheckpointCorrupt,
+                                        "checksum mismatch"):
+        checkpoint.restore(d, _tree())
+
+
+def test_crash_points_leave_previous_checkpoint_restorable(tmp_path):
+    """A crash at either armed point (mid-write after data.bin, or after
+    COMMITTED but before the atomic rename) must leave the PREVIOUS step
+    intact and the torn step invisible to all_steps/restore."""
+    from repro.faults import CrashInjected, FaultPlan, active
+    from repro.train import checkpoint
+
+    for point in ("ckpt.data_written", "ckpt.before_commit"):
+        d = str(tmp_path / point.replace(".", "_"))
+        os.makedirs(d)
+        checkpoint.save(d, 0, _tree(), keep=0)
+        with active(FaultPlan(crash_points=(point,))):
+            with np.testing.assert_raises_regex(CrashInjected, point):
+                checkpoint.save(d, 1, jax.tree.map(lambda a: a + 1, _tree()))
+        assert checkpoint.all_steps(d) == [0]
+        restored, step = checkpoint.restore(d, _tree())
+        assert step == 0
+        np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                      np.full((32,), 2.5))
+        # the next successful save reclaims the torn tmp dir and lands
+        checkpoint.save(d, 2, _tree(), keep=0)
+        assert checkpoint.latest_step(d) == 2
+        assert not [x for x in os.listdir(d) if x.startswith(".tmp_step_")]
+
+
+def test_async_checkpointer_surfaces_injected_crash(tmp_path):
+    from repro.faults import CrashInjected, FaultPlan, active
+    from repro.train.async_ckpt import AsyncCheckpointer
+
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    with active(FaultPlan(crash_points=("ckpt.before_commit",))):
+        ck = AsyncCheckpointer(d, keep=2, compress=False)
+        ck.save(0, {"w": jnp.zeros((128,))})
+        try:
+            with np.testing.assert_raises(CrashInjected):
+                ck.wait()
+        finally:
+            ck.close()

@@ -1,0 +1,188 @@
+"""Fault-injection harness (repro.faults): plan determinism, wire
+corruption, crash points, and the serve-engine wrapper."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
+from repro.faults import (BENIGN, CrashInjected, DroppedRequest, FaultPlan,
+                          TransientServeError, active, corrupt_update,
+                          crashpoint, named_plan, wrap_engine)
+
+FMT8 = F2PFormat(8, 2, Flavor.SR, signed=True)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism and rates
+# ---------------------------------------------------------------------------
+def test_client_fault_pure_in_seed_round_client():
+    plan = named_plan("chaos-small")
+    a = plan.client_fault(3, 17)
+    # call order / other clients cannot shift the draw
+    for other in (0, 1, 99, 17):
+        plan.client_fault(5, other)
+    assert plan.client_fault(3, 17) == a
+    # a fresh equal plan replays the same fate (replayable experiments)
+    assert FaultPlan(**{f.name: getattr(plan, f.name)
+                        for f in plan.__dataclass_fields__.values()}) \
+        .client_fault(3, 17) == a
+
+
+def test_distinct_keys_distinct_fates():
+    plan = FaultPlan(seed=1, dropout=0.5, straggler=0.5)
+    fates = {(r, c): plan.client_fault(r, c)
+             for r in range(4) for c in range(32)}
+    # not all identical (the rng actually keys on round AND client)
+    assert len({(f.dropped, round(f.delay, 6)) for f in fates.values()}) > 2
+
+
+def test_empirical_rates_match_plan():
+    plan = FaultPlan(seed=0, dropout=0.2, straggler=0.1, duplicate=0.1,
+                     nan_delta=0.08)
+    fates = [plan.client_fault(r, c) for r in range(20) for c in range(100)]
+    n = len(fates)
+    assert abs(sum(f.dropped for f in fates) / n - 0.20) < 0.03
+    assert abs(sum(f.delay > 0 for f in fates) / n - 0.10) < 0.03
+    assert abs(sum(f.duplicates for f in fates) / n - 0.10) < 0.03
+    assert abs(sum(f.corrupt == "nan" for f in fates) / n - 0.08) < 0.03
+
+
+def test_benign_plan_is_benign():
+    plan = FaultPlan()
+    for c in range(50):
+        assert plan.client_fault(0, c) == BENIGN
+    np.testing.assert_array_equal(plan.arrival_order(0, 10), np.arange(10))
+
+
+def test_arrival_order_reorder_is_permutation_and_deterministic():
+    plan = FaultPlan(seed=4, reorder=True)
+    p1, p2 = plan.arrival_order(2, 16), plan.arrival_order(2, 16)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(np.sort(p1), np.arange(16))
+    assert not np.array_equal(p1, np.arange(16))  # it actually shuffles
+
+
+def test_named_plan_registry():
+    assert named_plan("chaos-small").dropout == pytest.approx(0.20)
+    assert named_plan("none") == FaultPlan()
+    with pytest.raises(ValueError, match="unknown fault plan"):
+        named_plan("chaos-XL")
+
+
+# ---------------------------------------------------------------------------
+# wire corruption
+# ---------------------------------------------------------------------------
+def _wire_update(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, size=(2, 64)).astype(np.float32)
+    return {"w": QT.quantize(jnp.asarray(x), FMT8, block=32, packed=True),
+            "b": rng.normal(0, 1, size=(16,)).astype(np.float32)}
+
+
+def test_corrupt_update_bitflip_flips_exactly_one_bit():
+    u = _wire_update()
+    plan = FaultPlan(seed=9)
+    v = corrupt_update(u, "bitflip", plan.rng("corrupt", 0, 0))
+    import jax
+    orig = [np.asarray(x) for x in jax.tree.leaves(u)]
+    corr = [np.asarray(x) for x in jax.tree.leaves(v)]
+    diff_bits = sum(
+        int(np.unpackbits(np.bitwise_xor(
+            a.reshape(-1).view(np.uint8),
+            b.reshape(-1).view(np.uint8))).sum())
+        for a, b in zip(orig, corr))
+    assert diff_bits == 1
+    # the original is untouched (corruption copies)
+    u2 = _wire_update()
+    for a, b in zip(orig, [np.asarray(x) for x in jax.tree.leaves(u2)]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_corrupt_update_nan_plants_nonfinite_in_float_leaf():
+    import jax
+    u = _wire_update()
+    v = corrupt_update(u, "nan", FaultPlan(seed=2).rng("corrupt", 1, 5))
+    bad = [np.asarray(x) for x in jax.tree.leaves(v)
+           if np.asarray(x).dtype.kind == "f"
+           and not np.all(np.isfinite(np.asarray(x)))]
+    assert bad, "nan corruption planted nothing non-finite"
+    with pytest.raises(ValueError, match="unknown corruption"):
+        corrupt_update(u, "gamma-ray", FaultPlan().rng("corrupt", 0, 0))
+
+
+def test_nan_corruption_always_caught_by_gate():
+    """The acceptance invariant behind 'never commits a non-finite model':
+    every nan-corrupted update must trip validate_update."""
+    from repro.fl.exact import UpdateRejected, validate_update
+    plan = named_plan("chaos-small")
+    caught = 0
+    for c in range(24):
+        v = corrupt_update(_wire_update(c), "nan", plan.rng("corrupt", 0, c))
+        with pytest.raises(UpdateRejected):
+            validate_update(v)
+        caught += 1
+    assert caught == 24
+
+
+# ---------------------------------------------------------------------------
+# crash points
+# ---------------------------------------------------------------------------
+def test_crashpoint_noop_when_disarmed():
+    crashpoint("ckpt.before_commit")   # must not raise
+
+
+def test_crashpoint_fires_once_then_disarms():
+    with active(FaultPlan(crash_points=("cp.test",))):
+        with pytest.raises(CrashInjected, match="cp.test"):
+            crashpoint("cp.test")
+        crashpoint("cp.test")          # second hit: already disarmed
+        crashpoint("cp.other")         # unarmed name: no-op
+    crashpoint("cp.test")              # context exit uninstalls
+
+
+def test_active_uninstalls_on_error():
+    with pytest.raises(RuntimeError, match="boom"):
+        with active(FaultPlan(crash_points=("cp.x",))):
+            raise RuntimeError("boom")
+    crashpoint("cp.x")                 # disarmed despite the exception
+
+
+# ---------------------------------------------------------------------------
+# serve-engine wrapper
+# ---------------------------------------------------------------------------
+class _FakeEngine:
+    def __init__(self):
+        self.calls = []
+
+    def generate(self, prompts, max_new, eos=-1):
+        self.calls.append((prompts, max_new, eos))
+        return "tokens"
+
+
+def test_faulty_engine_passthrough_when_benign():
+    eng = _FakeEngine()
+    fe = wrap_engine(eng, FaultPlan())
+    assert fe.generate("p", 4) == "tokens"
+    assert eng.calls == [("p", 4, -1)]
+    assert fe.stats == {"delayed": 0, "dropped": 0, "transient": 0}
+
+
+def test_faulty_engine_injects_per_request():
+    eng = _FakeEngine()
+    fe = wrap_engine(eng, FaultPlan(seed=3, dropout=0.3, straggler=0.3,
+                                    transient=0.3),
+                     time_scale=1e-6)
+    ok = 0
+    for _ in range(60):
+        try:
+            fe.generate("p", 1)
+            ok += 1
+        except (DroppedRequest, TransientServeError):
+            pass
+    assert fe.stats["dropped"] > 0
+    assert fe.stats["transient"] > 0
+    assert fe.stats["delayed"] > 0
+    assert ok == len(eng.calls)       # engine saw exactly the survivors
+    assert fe.requests == 60

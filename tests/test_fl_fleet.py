@@ -1,0 +1,177 @@
+"""Fleet-scale straggler-tolerant rounds (fl.rounds.run_fleet_rounds):
+delivery-fault invariance on the exact aggregation path, quorum semantics,
+the fault matrix, and the per-client data-stream seeding contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.faults import FaultPlan, named_plan
+from repro.fl import ClientConfig, FleetConfig, run_fleet_rounds, toy_task
+from repro.fl.rounds import _client_stream
+
+TINY = dict(d_model=32, n_layers=1, vocab=128, seq_len=8, batch=2)
+
+
+def _task():
+    return toy_task(**TINY)
+
+
+def _cfg(**kw):
+    ccfg = kw.pop("client", ClientConfig(local_steps=1, scale_mode="pow2",
+                                         error_feedback=False, packed=True,
+                                         min_size=512))
+    base = dict(n_clients=40, sample=16, quorum=8, rounds=2, client=ccfg,
+                client_batch=8)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def _params_bits_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x).view(np.uint8),
+                                      np.asarray(y).view(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# delivery faults that MUST NOT change a bit
+# ---------------------------------------------------------------------------
+def test_reorder_and_duplicates_bit_identical_to_benign():
+    """Reordered mailbox drains and at-least-once duplicate deliveries are
+    absorbed exactly: same committed model, bit for bit."""
+    clean = run_fleet_rounds(_cfg(), _task())
+    noisy = run_fleet_rounds(
+        _cfg(), _task(),
+        faults=FaultPlan(seed=5, duplicate=0.5, reorder=True))
+    assert noisy["dup_skipped"] and sum(noisy["dup_skipped"]) > 0
+    assert all(noisy["committed"])
+    _params_bits_equal(clean["params"], noisy["params"])
+    assert clean["eval_loss"] == noisy["eval_loss"]
+
+
+def test_vmap_chunk_width_cannot_change_bits():
+    """client_batch is a throughput knob: any chunking of the vmapped
+    compute folds the same contribution set."""
+    a = run_fleet_rounds(_cfg(client_batch=4), _task())
+    b = run_fleet_rounds(_cfg(client_batch=16), _task())
+    _params_bits_equal(a["params"], b["params"])
+
+
+# ---------------------------------------------------------------------------
+# quorum / graceful degradation
+# ---------------------------------------------------------------------------
+def test_quorum_not_met_model_stands_still():
+    flcfg = _cfg(rounds=1, quorum=17)    # quorum > sample: can never commit
+    hist = run_fleet_rounds(flcfg, _task())
+    assert hist["committed"] == [False]
+    cfg, dcfg, loss_fn, init_params_fn = _task()
+    p0 = init_params_fn(cfg, jax.random.PRNGKey(flcfg.seed))
+    _params_bits_equal(p0, hist["params"])
+
+
+def test_uncommitted_arrivals_refold_next_round_with_staleness():
+    # round 0 cannot commit (everyone is a straggler past the deadline);
+    # round 1 folds the buffered arrivals at age 1 alongside fresh ones
+    plan = FaultPlan(seed=1, straggler=1.0, straggler_delay=50.0)
+    hist = run_fleet_rounds(_cfg(rounds=2, deadline=3.0), _task(),
+                            faults=plan)
+    assert hist["committed"][0] is False
+    assert hist["late_folded"][1] > 0
+    assert hist["committed"][1] is True
+
+
+def test_expiry_drops_arrivals_past_max_staleness():
+    plan = FaultPlan(seed=1, straggler=1.0, straggler_delay=50.0)
+    hist = run_fleet_rounds(_cfg(rounds=3, deadline=3.0, max_staleness=0),
+                            _task(), faults=plan)
+    # everything arrives late and expires after one round of buffering
+    assert sum(hist["expired"]) > 0
+    assert not any(hist["committed"])
+
+
+# ---------------------------------------------------------------------------
+# fault matrix: dropout x straggler x corruption
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dropout,straggler,nan_delta", [
+    (0.3, 0.0, 0.0),
+    (0.0, 0.4, 0.0),
+    (0.0, 0.0, 0.3),
+    (0.2, 0.2, 0.15),
+])
+def test_fault_matrix_accounting_and_finite_model(dropout, straggler,
+                                                  nan_delta):
+    plan = FaultPlan(seed=11, dropout=dropout, straggler=straggler,
+                     straggler_delay=20.0, nan_delta=nan_delta)
+    flcfg = _cfg(rounds=1, quorum=1)
+    hist = run_fleet_rounds(flcfg, _task(), faults=plan)
+    # every sampled client is accounted for exactly once at emission...
+    emitted = flcfg.sample - hist["dropped"][0] - hist["failed"][0]
+    # ...and every admitted delivery either folded or quarantined; the rest
+    # of the emissions are buffered past the deadline for the next round
+    on_time = hist["admitted"][0] + hist["quarantined"][0]
+    assert on_time <= emitted
+    if dropout:
+        assert hist["dropped"][0] > 0
+    if straggler:
+        assert on_time < emitted          # someone blew the deadline
+    if nan_delta:
+        assert hist["quarantined"][0] > 0
+    for leaf in jax.tree.leaves(hist["params"]):
+        assert bool(np.all(np.isfinite(np.asarray(leaf))))
+    assert np.isfinite(hist["eval_loss"][0])
+
+
+def test_chaos_convergence_within_tolerance():
+    """Scaled-down ISSUE-6 acceptance: under chaos-small the final loss
+    stays within 1.05x of the fault-free run and the model stays finite."""
+    flcfg = _cfg(n_clients=64, sample=32, quorum=8, rounds=2)
+    clean = run_fleet_rounds(flcfg, _task())
+    chaos = run_fleet_rounds(flcfg, _task(), faults=named_plan("chaos-small"))
+    assert chaos["eval_loss"][-1] <= 1.05 * clean["eval_loss"][-1]
+    for leaf in jax.tree.leaves(chaos["params"]):
+        assert bool(np.all(np.isfinite(np.asarray(leaf))))
+
+
+# ---------------------------------------------------------------------------
+# client data-stream seeding (the fixed PR-6 satellite)
+# ---------------------------------------------------------------------------
+def test_client_stream_pure_in_client_and_round():
+    _, dcfg, _, _ = _task()
+    a = _client_stream(dcfg, 2, round_i=1, client_id=7)
+    b = _client_stream(dcfg, 2, round_i=1, client_id=7)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    # distinct clients (and the same client across rounds) see distinct data
+    c = _client_stream(dcfg, 2, round_i=1, client_id=8)
+    d = _client_stream(dcfg, 2, round_i=2, client_id=7)
+    tok = "tokens" if "tokens" in a else list(a)[0]
+    assert not np.array_equal(np.asarray(a[tok]), np.asarray(c[tok]))
+    assert not np.array_equal(np.asarray(a[tok]), np.asarray(d[tok]))
+
+
+def test_client_stream_disjoint_from_eval_batch():
+    from repro.data import global_batch
+    _, dcfg, _, _ = _task()
+    ev = global_batch(dcfg, 1_000_003)
+    tok = list(ev)[0]
+    for cid in (0, 1, 500):
+        s = _client_stream(dcfg, 2, round_i=0, client_id=cid)
+        for step in range(2):
+            assert not np.array_equal(np.asarray(s[tok])[step],
+                                      np.asarray(ev[tok]))
+
+
+def test_fleet_wire_bytes_use_canonical_packed_accounting():
+    """hist wire bytes == sum of per-update server wire_bytes (which route
+    through kernels.bits.packed_nbytes for packed QTensor leaves)."""
+    from repro.fl import server as S
+    from repro.fl import client as C
+    flcfg = _cfg(rounds=1)
+    hist = run_fleet_rounds(flcfg, _task())
+    cfg, dcfg, loss_fn, init_params_fn = _task()
+    params = init_params_fn(cfg, jax.random.PRNGKey(flcfg.seed))
+    ccfg = flcfg.client
+    fn = jax.jit(C.make_client_update(loss_fn, ccfg))
+    res = C.init_client_residuals(params, ccfg)
+    upd, _, _ = fn(params, res, _client_stream(dcfg, ccfg.local_steps, 0, 0))
+    per_client = S.wire_bytes(jax.tree.map(np.asarray, upd))
+    assert hist["wire_bytes_per_round"][0] == per_client * hist["admitted"][0]
