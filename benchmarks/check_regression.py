@@ -21,8 +21,18 @@ Semantics:
     ``table5_us``);
   * a metric regresses when it is worse than ``threshold``x the baseline
     median; any regression fails the gate (exit 1) with a table of
-    offenders. Metrics present on only one side are reported, not failed —
-    new benches need a first run to seed their baseline.
+    offenders. NEW metrics are reported as notes, not failed — they need a
+    first run to seed their baseline;
+  * REMOVED gated metrics FAIL: for every bench section the candidate ran
+    (top-level dict-valued entry keys), the gated metrics recorded by the
+    most recent baseline run of that section must still be present —
+    silently dropping a timing is exactly the regression-hiding this gate
+    exists to catch. ``--only`` subset runs record their subset in the
+    entry's ``only`` field and are checked only for the sections they ran;
+    a full run (``only`` empty) is additionally held to every section the
+    baseline ever recorded, so deleting a whole bench from ``run.py``
+    fails too. Metrics that only appear in older baseline entries (already
+    absent from the last run of their section) stay notes.
 
 CI timing noise note: the 2.5x default is deliberately loose. Shared runners
 jitter 10-50%; the gate exists to catch order-of-magnitude mistakes (async
@@ -83,10 +93,38 @@ def flatten_metrics(entry: dict) -> dict[str, tuple[float, str]]:
     return out
 
 
+def _sections(entry: dict) -> set[str]:
+    """Top-level bench sections an entry actually ran (dict-valued keys;
+    skipped benches are recorded as None by run.py's trajectory append)."""
+    return {k for k, v in entry.items() if isinstance(v, dict)}
+
+
+def removed_metrics(baseline_entries: list[dict], candidate: dict) -> list[str]:
+    """Gated metrics the fresh run should have produced but dropped (see
+    module doc): for every section the candidate ran — plus, on a full run,
+    every section the baseline ever ran — the gated keys of the most recent
+    baseline entry with that section must all be present."""
+    cand = flatten_metrics(candidate)
+    checked = _sections(candidate)
+    if not candidate.get("only"):
+        for e in baseline_entries:
+            checked |= _sections(e)
+    gone: list[str] = []
+    for sec in sorted(checked):
+        last = next((e for e in reversed(baseline_entries)
+                     if isinstance(e.get(sec), dict)), None)
+        if last is None:
+            continue
+        want = flatten_metrics({sec: last[sec]})
+        gone.extend(sorted(set(want) - set(cand)))
+    return gone
+
+
 def compare(baseline_entries: list[dict], candidate: dict,
             threshold: float) -> tuple[list[dict], list[str]]:
-    """(regressions, notes). A regression dict has metric/baseline/fresh/
-    ratio keys; notes cover metrics lacking a comparable counterpart."""
+    """(regressions, notes). A slowdown regression dict has metric/
+    baseline_median/fresh/slowdown keys; a removed-metric regression has
+    metric/removed; notes cover metrics lacking a comparable counterpart."""
     cand = flatten_metrics(candidate)
     base: dict[str, list[float]] = {}
     directions: dict[str, str] = {}
@@ -108,7 +146,10 @@ def compare(baseline_entries: list[dict], candidate: dict,
         if ratio > threshold:
             regressions.append({"metric": k, "baseline_median": med,
                                 "fresh": fresh, "slowdown": ratio})
-    for k in sorted(set(base) - set(cand)):
+    removed = removed_metrics(baseline_entries, candidate)
+    for k in removed:
+        regressions.append({"metric": k, "removed": True})
+    for k in sorted(set(base) - set(cand) - set(removed)):
         notes.append(f"metric missing from fresh run: {k}")
     return regressions, notes
 
@@ -149,8 +190,13 @@ def main(argv=None) -> int:
         return 0
     print("  REGRESSIONS:")
     for r in regressions:
-        print(f"    {r['metric']}: {r['baseline_median']:.1f} -> "
-              f"{r['fresh']:.1f} ({r['slowdown']:.2f}x worse)")
+        if r.get("removed"):
+            print(f"    {r['metric']}: gated metric REMOVED — present in "
+                  "the baseline's latest run of its section, missing from "
+                  "the fresh run")
+        else:
+            print(f"    {r['metric']}: {r['baseline_median']:.1f} -> "
+                  f"{r['fresh']:.1f} ({r['slowdown']:.2f}x worse)")
     return 1
 
 

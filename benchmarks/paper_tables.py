@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import counters as C
 from repro.core.f2p import F2PFormat, Flavor
-from repro.core.formats import (FPFormat, IntFormat, SEADFormat, fp16, bf16,
+from repro.core.formats import (FPFormat, IntFormat, SEADFormat, bf16, fp16,
                                 tf32)
 from repro.core.quantize import quantization_mse
 

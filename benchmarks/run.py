@@ -233,8 +233,8 @@ def bench_packed(quick=False, warmup=1, reps=3):
     nbytes ratio (the ISSUE-5 acceptance: <= 0.80x at 6-bit)."""
     import jax.numpy as jnp
 
-    from repro.core.f2p import F2PFormat, Flavor
     from repro.core import qtensor as QT
+    from repro.core.f2p import F2PFormat, Flavor
     from repro.kernels.bits import pack_bits_jit, unpack_bits_jit
 
     shape = (256, 1024) if quick else (1024, 1024)
@@ -312,6 +312,62 @@ def bench_matmul(quick=False, warmup=1, reps=3):
             res[f"{name}_us"] = us
             res[f"{name}_eff_gbps"] = gbps
             res[f"{name}_weight_stream_bytes"] = stream_b
+        out[b] = res
+    return out
+
+
+def bench_attention(quick=False, warmup=1, reps=3):
+    """Fused packed-KV decode attention (kernels/f2p_attention, DESIGN §11)
+    vs the dequantize-whole-cache path it replaces. Effective GB/s uses the
+    logical f32 bytes of the KV the step attends over (2*B*S*K*hd*4 — same
+    compression-independent numerator as bench_matmul), so fused-vs-unfused
+    differences are wall-clock differences; ``kv_stream_bytes`` is the
+    ACTUAL packed HBM stream the fused kernel reads — n_bits/8 bytes per
+    element on the code words (+ one f32 scale per (position, head) row)."""
+    import jax.numpy as jnp
+
+    from repro.core import qtensor as QT
+    from repro.core.f2p import F2PFormat, Flavor
+    from repro.kernels import dispatch
+    from repro.kernels import f2p_attention as FA
+    from repro.kernels.bits import packed_nbytes
+
+    B, S, K, G, hd = (2, 1024, 4, 4, 64) if quick else (4, 4096, 8, 4, 128)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, 1, K * G, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    kv_logical = 2 * B * S * K * hd * 4
+    out = {"bskgh": [B, S, K, G, hd]}
+
+    backends = ["xla"]
+    if dispatch.pallas_variant() == dispatch.PALLAS:
+        backends.append("pallas")
+    for b in backends:
+        res = {}
+        for nbits in (6, 8, 16):
+            fmt = F2PFormat(nbits, 2, Flavor.SR, signed=True)
+            kq = QT.quantize(k, fmt, block=hd, packed=True, backend="xla")
+            vq = QT.quantize(v, fmt, block=hd, packed=True, backend="xla")
+            f_us, _ = timeit(FA.attention_packed, q, kq, vq, kv_len=S - 3,
+                             backend=b, warmup=warmup, reps=reps)
+            u_us, _ = timeit(FA.attention_packed_reference, q, kq, vq,
+                             kv_len=S - 3, warmup=warmup, reps=reps)
+            words_b = 2 * B * S * K * packed_nbytes(hd, nbits)
+            scale_b = 2 * B * S * K * 4
+            gbps = kv_logical / f_us / 1e3
+            print(f"attn_fused_{nbits}b_{b},{f_us:.0f},eff_gbps={gbps:.2f}"
+                  f"/stream_mb={(words_b + scale_b)/1e6:.2f}")
+            print(f"attn_unfused_{nbits}b_{b},{u_us:.0f},"
+                  f"fused_speedup={u_us/f_us:.2f}x")
+            res[str(nbits)] = {
+                "fused_us": f_us, "unfused_us": u_us,
+                "fused_eff_gbps": gbps,
+                "unfused_eff_gbps": kv_logical / u_us / 1e3,
+                "kv_stream_bytes": words_b + scale_b,
+                # the acceptance headline: code words at n_bits/8 B/elem
+                "kv_word_bytes_per_elem": words_b / (2 * B * S * K * hd),
+            }
         out[b] = res
     return out
 
@@ -568,6 +624,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "packed": bench_packed,
     "matmul": bench_matmul,
+    "attention": bench_attention,
     "serve": bench_serve,
     "sketch": bench_sketch,
     "compression": bench_compression,
@@ -586,10 +643,15 @@ def _append_trajectory(results: dict, args) -> None:
         "quick": bool(args.quick),
         "warmup": args.warmup,
         "reps": args.reps,
+        # which benches were requested ("" = full run) — the regression gate
+        # uses this to tell "section intentionally skipped" from "section
+        # silently removed" (benchmarks/check_regression.py)
+        "only": args.only,
         "host_encode": results.get("host_encode"),
         "kernels": results.get("kernels"),
         "packed": results.get("packed"),
         "matmul": results.get("matmul"),
+        "attention": results.get("attention"),
         "serve": results.get("serve"),
         "sketch": results.get("sketch"),
         "fl": results.get("fl"),
@@ -640,8 +702,8 @@ def main() -> None:
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
-    if {"host_encode", "kernels", "packed", "matmul", "serve", "sketch",
-            "fl", "fl_fleet", "autotune"} & set(names):
+    if {"host_encode", "kernels", "packed", "matmul", "attention", "serve",
+            "sketch", "fl", "fl_fleet", "autotune"} & set(names):
         _append_trajectory(results, args)
 
 

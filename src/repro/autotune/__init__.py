@@ -23,15 +23,15 @@ Consumers: ``fl.client`` (per-leaf delta formats, re-solved every K rounds),
 (counter grids by max-count/target-range), ``train.checkpoint`` (policy
 round-trip), ``configs.registry.default_policy`` (per-model stubs).
 """
-from repro.autotune.error_models import (Dist, UniformDist, LogNormalDist,
-                                         ZipfDist, HistogramDist,
-                                         expected_mse, max_rel_error)
-from repro.autotune.calibrate import (HistSpec, NORM_SPEC, empty_state,
-                                      update, update_tree, to_dist,
-                                      scale_rms, histogram_of, leaf_summary)
-from repro.autotune.policy import (FormatPolicy, PolicyRule, LeafSpec,
-                                   solve, candidate_formats, leaf_path_str,
-                                   path_from_keystr)
+from repro.autotune.calibrate import (NORM_SPEC, HistSpec, empty_state,
+                                      histogram_of, leaf_summary, scale_rms,
+                                      to_dist, update, update_tree)
+from repro.autotune.error_models import (Dist, HistogramDist, LogNormalDist,
+                                         UniformDist, ZipfDist, expected_mse,
+                                         max_rel_error)
+from repro.autotune.policy import (FormatPolicy, LeafSpec, PolicyRule,
+                                   candidate_formats, leaf_path_str,
+                                   path_from_keystr, solve)
 
 __all__ = ["Dist", "UniformDist", "LogNormalDist", "ZipfDist",
            "HistogramDist", "expected_mse", "max_rel_error",

@@ -29,10 +29,9 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.autotune.error_models import Dist, expected_mse
 from repro.core.f2p import F2PFormat
 from repro.core.formats import format_bits, format_name, named_format
-
-from repro.autotune.error_models import Dist, expected_mse
 
 __all__ = ["PolicyRule", "FormatPolicy", "LeafSpec", "solve",
            "candidate_formats", "leaf_path_str", "path_from_keystr"]

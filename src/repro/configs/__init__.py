@@ -1,4 +1,3 @@
-from repro.configs.registry import (ARCH_IDS, SHAPES, full_config,
-                                    smoke_config, input_specs, get_arch,
-                                    shape_is_applicable, canon,
-                                    default_policy)
+from repro.configs.registry import (ARCH_IDS, SHAPES, canon, default_policy,
+                                    full_config, get_arch, input_specs,
+                                    shape_is_applicable, smoke_config)

@@ -1,9 +1,10 @@
 from repro.core.f2p import F2PFormat, Flavor
-from repro.core.formats import (FPFormat, IntFormat, SEADFormat, GridFormat,
-                                fp16, bf16, tf32, named_format)
-from repro.core.quantize import (minmax_quantize, quantization_mse,
-                                 block_quantize, block_dequantize, BlockQuantized)
+from repro.core.formats import (FPFormat, GridFormat, IntFormat, SEADFormat,
+                                bf16, fp16, named_format, tf32)
 # NOTE: qtensor.quantize/dequantize are not re-exported bare — they would
 # shadow the `repro.core.quantize` submodule attribute on the package.
-from repro.core.qtensor import (QTensor, block_scales, quantize_tree,
-                                dequantize_tree)
+from repro.core.qtensor import (QTensor, block_scales, dequantize_tree,
+                                quantize_tree)
+from repro.core.quantize import (BlockQuantized, block_dequantize,
+                                 block_quantize, minmax_quantize,
+                                 quantization_mse)

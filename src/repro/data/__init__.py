@@ -1,1 +1,1 @@
-from repro.data.pipeline import DataConfig, host_batch, global_batch
+from repro.data.pipeline import DataConfig, global_batch, host_batch

@@ -8,10 +8,10 @@ never shifts unrelated draws. The plan WRAPS the FL round driver,
 ``serve.Engine``, and the checkpoint writer from outside; hot paths carry a
 single disarmed-probe ``crashpoint`` call at most.
 """
-from repro.faults.plan import BENIGN, ClientFault, FaultPlan, named_plan
 from repro.faults.inject import (CrashInjected, DroppedRequest, FaultyEngine,
                                  TransientServeError, active, corrupt_update,
                                  crashpoint, install, uninstall, wrap_engine)
+from repro.faults.plan import BENIGN, ClientFault, FaultPlan, named_plan
 
 __all__ = ["BENIGN", "ClientFault", "FaultPlan", "named_plan",
            "CrashInjected", "DroppedRequest", "FaultyEngine",

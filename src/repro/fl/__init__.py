@@ -8,8 +8,8 @@ fed-avg. The third serving scenario after LLM decode and sketch ingest.
 """
 from repro.fl.client import (ClientConfig, init_client_residuals,
                              make_client_update)
-from repro.fl.server import aggregate, apply_update, wire_bytes
 from repro.fl.exact import (AggregationOverflow, ExactAggregator,
                             UpdateRejected, aggregate_exact, validate_update)
 from repro.fl.rounds import (AutotuneConfig, FedAvgConfig, FleetConfig,
                              run_fed_avg, run_fleet_rounds, toy_task)
+from repro.fl.server import aggregate, apply_update, wire_bytes

@@ -30,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
 from repro.kernels.bits import packed_nbytes
 
 FL_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)

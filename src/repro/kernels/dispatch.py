@@ -37,6 +37,11 @@ op actually has an implementation for it. Registered ops:
   ``dequant_matmul`` / ``dequant_matmul_packed``  fused dequantize-matmul on
                                            byte-aligned / bit-packed weight
                                            streams (``kernels/f2p_matmul.py``)
+  ``attention_packed``                     fused flash-style online-softmax
+                                           attention streaming bit-packed KV
+                                           word tiles with in-register
+                                           unpack + decode
+                                           (``kernels/f2p_attention.py``)
   ``counter_advance`` / ``counter_estimate``  batched probabilistic grid-counter
                                            updates + decode-LUT estimate reads
                                            for the sketch engine

@@ -1,0 +1,421 @@
+"""Fused flash-style attention over the bit-packed F2P KV cache (DESIGN §11).
+
+The serving decode loop used to dequantize the WHOLE quantized cache to f32
+before every attention call (``models.attention._cache_read``), so the
+packed-storage bandwidth win of DESIGN.md §9 died at the attention boundary.
+This kernel carries the packed stream through attention: each grid step
+streams one (tile, packed_words(head_dim)) uint32 WORD tile of K and V per
+(batch, kv-head) from the cache layout ``[B, S, K, W]`` — n_bits/8 bytes per
+element on the KV HBM stream — unpacks it with the gather-free superblock
+lanes of :func:`repro.kernels.bits.unpack_bits`, decodes branch-free
+in-register (:func:`repro.kernels.f2p_quant.dequantize_tile_math`), applies
+the per-(position, head) scale, and folds the tile into an online-softmax
+running (acc, m, l) state. Byte-aligned codes or f32 KV are never
+materialized in HBM.
+
+GQA head folding: q ``[B, Sq, H, hd]`` with H = K*G is reshaped to
+``[B, K, R, hd]`` rows R = G*Sq (row r = g*Sq + s), so one kernel instance
+per (batch, kv-head) feeds all G query heads (and all Sq query positions)
+against a single streamed KV tile. Causal masks recover the query position
+as ``q_offset + r % Sq``.
+
+Backends (dispatch op ``attention_packed``):
+
+  ``pallas`` / ``pallas_interpret``  the Pallas kernel, grid (B, K, S/tile)
+                                     with the kv-tile axis innermost —
+                                     sequential, so the (acc, m, l) state
+                                     persists in the revisited output blocks
+                                     exactly like the matmul K-axis
+                                     accumulator
+  ``xla``                            the SAME per-tile math (shared helpers
+                                     below) as a ``lax.scan`` over kv tiles,
+                                     with unpack + decode + attention fused
+                                     under one jit — the semantics oracle
+
+All three run the identical op sequence in f32, so fused outputs are
+bitwise-identical to the unpack-then-dequant-then-attend reference
+(:func:`attention_packed_reference`) — pinned by ``tests/test_attention.py``
+across formats × n_bits × odd sequence lengths.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.f2p import F2PFormat
+from repro.core.qtensor import QTensor
+from repro.kernels import dispatch
+from repro.kernels.bits import unpack_bits
+from repro.kernels.f2p_quant import dequantize_tile_math
+
+__all__ = ["attention_packed", "attention_packed_reference",
+           "attention_reference", "attention_tile", "set_attention_tile",
+           "autotune_attention_tile", "DEFAULT_TILE"]
+
+# kv-tile length (cache positions per grid step). Per-(backend, n_bits)
+# overrides mirror the matmul tile table (f2p_matmul._TILE_TABLE): narrow
+# formats unpack more elements per word, so the sweet spot shifts with
+# n_bits. Seeded by autotune_attention_tile; DEFAULT_TILE when absent.
+DEFAULT_TILE = 128
+_TILE_TABLE: dict[tuple[str, int], int] = {}
+
+
+def attention_tile(backend: str, n_bits: int) -> int:
+    """kv-tile length for (backend, n_bits) — table hit or DEFAULT_TILE."""
+    return _TILE_TABLE.get((backend, int(n_bits)), DEFAULT_TILE)
+
+
+def set_attention_tile(backend: str, n_bits: int, tile: int) -> None:
+    _TILE_TABLE[(backend, int(n_bits))] = int(tile)
+
+
+# ---------------------------------------------------------------------------
+# Shared per-tile math — ONE implementation used by the Pallas kernel body
+# AND the xla scan, so the backends agree bitwise.
+# ---------------------------------------------------------------------------
+def _decode_rows(words, scales, fmt: F2PFormat, hd: int):
+    """[..., W] uint32 words + [..., 1] f32 scales -> [..., hd] f32 values:
+    superblock unpack, branch-free decode, per-row scale. Pure jnp — runs
+    unchanged inside Pallas kernel bodies."""
+    codes = unpack_bits(words, fmt.n_bits, hd).astype(jnp.int32)
+    return dequantize_tile_math(codes, fmt, jnp.float32) * scales
+
+
+def _tile_mask(j, tile: int, rows: int, sq: int, causal: bool, kvlen, qoff):
+    """[rows, tile] validity of kv tile ``j``: position < kvlen, and (causal)
+    position <= the row's query position q_offset + r % Sq."""
+    kpos = j * tile + jax.lax.broadcasted_iota(jnp.int32, (rows, tile), 1)
+    valid = kpos < kvlen
+    if causal:
+        r = jax.lax.broadcasted_iota(jnp.int32, (rows, tile), 0)
+        valid = valid & (kpos <= qoff + r % sq)
+    return valid
+
+
+def _online_step(q2, k_t, v_t, valid, acc, m, l, scale):
+    """One online-softmax update: q2 [R,hd], k_t/v_t [T,hd] f32, valid [R,T],
+    running (acc [R,hd], m [R,1], l [R,1]). Same guarded rescale as
+    models.attention.chunked_attention (safe_m for fully-masked rows)."""
+    s = jnp.dot(q2, k_t.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, -jnp.inf)
+    m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - safe_m)
+    corr = jnp.exp(jnp.where(jnp.isfinite(m), m - safe_m, -jnp.inf))
+    l_new = l * corr + p.sum(axis=-1, keepdims=True)
+    acc_new = acc * corr + jnp.dot(p, v_t, preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def _finalize(acc, l):
+    return acc / jnp.maximum(l, 1e-37)
+
+
+def _fold_q(q, K: int):
+    """[B, Sq, H, hd] -> [B, K, G*Sq, hd] f32 (row r = g*Sq + s)."""
+    B, Sq, H, hd = q.shape
+    G = H // K
+    q3 = q.astype(jnp.float32).reshape(B, Sq, K, G, hd)
+    return q3.transpose(0, 2, 3, 1, 4).reshape(B, K, G * Sq, hd)
+
+
+def _unfold_o(o3, sq: int, dtype):
+    """Inverse of :func:`_fold_q`: [B, K, G*Sq, hd] -> [B, Sq, H, hd]."""
+    B, K, R, hd = o3.shape
+    G = R // sq
+    o = o3.reshape(B, K, G, sq, hd).transpose(0, 3, 1, 2, 4)
+    return o.reshape(B, sq, K * G, hd).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# xla backend: unpack + decode + online-softmax attention under ONE jit —
+# the semantics oracle the Pallas kernel is pinned against.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("fmt_k", "fmt_v", "sq",
+                                             "causal", "tile"))
+def _attention_xla(q3, kw, ks, vw, vs, lens, *, fmt_k, fmt_v, sq, causal,
+                   tile):
+    B, K, R, hd = q3.shape
+    S = kw.shape[1]
+    k = _decode_rows(kw, ks, fmt_k, hd)          # [B, S, K, hd] f32
+    v = _decode_rows(vw, vs, fmt_v, hd)
+    nt = -(-S // tile)
+    pad = nt * tile - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # [nt, B, K, tile, hd]: per-(batch, head) tiles in kernel layout
+    kt = k.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
+    vt = v.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
+    kvlen, qoff = lens[0, 0], lens[0, 1]
+    scale = 1.0 / math.sqrt(hd)
+    step = jax.vmap(jax.vmap(_online_step, in_axes=(0, 0, 0, None, 0, 0, 0,
+                                                    None)),
+                    in_axes=(0, 0, 0, None, 0, 0, 0, None))
+
+    def body(carry, inp):
+        acc, m, l = carry
+        j, (kb, vb) = inp
+        valid = _tile_mask(j, tile, R, sq, causal, kvlen, qoff)
+        return step(q3, kb, vb, valid, acc, m, l, scale), None
+
+    acc0 = jnp.zeros((B, K, R, hd), jnp.float32)
+    m0 = jnp.full((B, K, R, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, R, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nt), (kt, vt)))
+    return _finalize(acc, l)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: grid (B, K, S/tile), kv-tile axis innermost/sequential; the
+# online-softmax state lives in the revisited (b, h) output blocks (same
+# persistence contract the packed matmul uses for its K-axis accumulator).
+# ---------------------------------------------------------------------------
+def _fused_kernel(fmt_k, fmt_v, sq, causal, scale, tile, nt,
+                  q_ref, kw_ref, ks_ref, vw_ref, vs_ref, len_ref,
+                  o_ref, m_ref, l_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    R, hd = q_ref.shape[-2], q_ref.shape[-1]
+    q2 = q_ref[...].reshape(R, hd)
+    k_t = _decode_rows(kw_ref[...].reshape(tile, -1),
+                       ks_ref[...].reshape(tile, 1), fmt_k, hd)
+    v_t = _decode_rows(vw_ref[...].reshape(tile, -1),
+                       vs_ref[...].reshape(tile, 1), fmt_v, hd)
+    valid = _tile_mask(j, tile, R, sq, causal, len_ref[0, 0], len_ref[0, 1])
+    acc, m, l = _online_step(q2, k_t, v_t, valid,
+                             o_ref[...].reshape(R, hd),
+                             m_ref[...].reshape(R, 1),
+                             l_ref[...].reshape(R, 1), scale)
+    o_ref[...] = acc.reshape(o_ref.shape)
+    m_ref[...] = m.reshape(m_ref.shape)
+    l_ref[...] = l.reshape(l_ref.shape)
+
+    @pl.when(j == nt - 1)
+    def _fin():
+        o_ref[...] = _finalize(o_ref[...].reshape(R, hd),
+                               l_ref[...].reshape(R, 1)).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_k", "fmt_v", "sq", "causal",
+                                             "tile", "interpret"))
+def _attention_pallas(q3, kw, ks, vw, vs, lens, *, fmt_k, fmt_v, sq, causal,
+                      tile, interpret):
+    B, K, R, hd = q3.shape
+    S = kw.shape[1]
+    nt = -(-S // tile)
+    pad = nt * tile - S
+    if pad:
+        # zero words decode to the format's code-0 value, but every padded
+        # position sits at kpos >= S >= kvlen and is masked to exp(-inf)=0
+        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Wk, Wv = kw.shape[-1], vw.shape[-1]
+    scale = 1.0 / math.sqrt(hd)   # static: python float, f32 at use sites
+    out, _, _ = pl.pallas_call(
+        functools.partial(_fused_kernel, fmt_k, fmt_v, sq, causal, scale,
+                          tile, nt),
+        grid=(B, K, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, tile, 1, Wk), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, tile, 1, 1), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, tile, 1, Wv), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, tile, 1, 1), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, 2), lambda b, h, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, 1), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, 1), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, R, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, kw, ks, vw, vs, lens)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry wiring + the public QTensor-consuming entry points
+# ---------------------------------------------------------------------------
+@dispatch.register("attention_packed", dispatch.PALLAS)
+def _attn_pallas(q3, kw, ks, vw, vs, lens, **kw_static):
+    return _attention_pallas(q3, kw, ks, vw, vs, lens, interpret=False,
+                             **kw_static)
+
+
+@dispatch.register("attention_packed", dispatch.PALLAS_INTERPRET)
+def _attn_pallas_interp(q3, kw, ks, vw, vs, lens, **kw_static):
+    return _attention_pallas(q3, kw, ks, vw, vs, lens, interpret=True,
+                             **kw_static)
+
+
+@dispatch.register("attention_packed", dispatch.XLA)
+def _attn_xla(q3, kw, ks, vw, vs, lens, **kw_static):
+    return _attention_xla(q3, kw, ks, vw, vs, lens, **kw_static)
+
+
+def _check_cache(qt: QTensor, hd: int, what: str) -> None:
+    if not isinstance(qt, QTensor):
+        raise TypeError(f"{what} must be a QTensor, got {type(qt).__name__}")
+    if not qt.packed:
+        raise ValueError(f"{what} must be bit-packed (QTensor.packed=True); "
+                         "unpacked caches take the _cache_read path")
+    if qt.block != hd or qt.shape[-1] != hd:
+        raise ValueError(f"{what} must be blocked over head_dim={hd}, got "
+                         f"block={qt.block} shape={qt.shape}")
+
+
+def attention_packed(q, kq: QTensor, vq: QTensor, *, kv_len=None,
+                     causal: bool = False, q_offset=0,
+                     backend: str | None = None, tile: int | None = None):
+    """Fused attention straight off the packed KV cache.
+
+    q ``[B, Sq, H, hd]`` (any float dtype; math runs in f32), kq/vq packed
+    QTensors of logical shape ``[B, S, K, hd]`` with block = hd (the
+    canonical cache layout of ``models.attention.init_cache``). ``kv_len``
+    masks cache positions >= kv_len (decode: pos + 1); ``causal`` adds the
+    in-window causal mask using ``q_offset`` as the first query position.
+    Returns ``[B, Sq, H, hd]`` in q's dtype.
+    """
+    B, Sq, H, hd = q.shape
+    _check_cache(kq, hd, "kq")
+    _check_cache(vq, hd, "vq")
+    S, K = kq.shape[1], kq.shape[2]
+    if H % K:
+        raise ValueError(f"n_heads {H} not a multiple of kv heads {K}")
+    b, fn = dispatch.lookup("attention_packed", backend)
+    if tile is None:
+        tile = attention_tile(b, kq.fmt.n_bits)
+    tile = max(1, min(int(tile), S))
+    kv_len = S if kv_len is None else jnp.minimum(kv_len, S)
+    lens = jnp.stack([jnp.asarray(kv_len, jnp.int32).reshape(()),
+                      jnp.asarray(q_offset, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    o3 = fn(_fold_q(q, K), kq.codes, kq.scales, vq.codes, vq.scales, lens,
+            fmt_k=kq.fmt, fmt_v=vq.fmt, sq=Sq, causal=bool(causal), tile=tile)
+    return _unfold_o(o3, Sq, q.dtype)
+
+
+def attention_reference(q, k, v, *, kv_len=None, causal: bool = False,
+                        q_offset=0, tile: int = DEFAULT_TILE):
+    """Dense-KV online-softmax reference: the SAME tile loop as the fused
+    backends, on already-dequantized ``[B, S, K, hd]`` k/v. Matches
+    ``naive_attention`` numerically and the fused paths bitwise (given the
+    same tile)."""
+    B, Sq, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    tile = max(1, min(int(tile), S))
+    kv_len = S if kv_len is None else jnp.minimum(kv_len, S)
+    lens = jnp.stack([jnp.asarray(kv_len, jnp.int32).reshape(()),
+                      jnp.asarray(q_offset, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    o3 = _reference_jit(_fold_q(q, K), k.astype(jnp.float32),
+                        v.astype(jnp.float32), lens, sq=Sq,
+                        causal=bool(causal), tile=tile)
+    return _unfold_o(o3, Sq, q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sq", "causal", "tile"))
+def _reference_jit(q3, k, v, lens, *, sq, causal, tile):
+    B, K, R, hd = q3.shape
+    S = k.shape[1]
+    nt = -(-S // tile)
+    pad = nt * tile - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kt = k.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
+    vt = v.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
+    kvlen, qoff = lens[0, 0], lens[0, 1]
+    scale = 1.0 / math.sqrt(hd)
+    step = jax.vmap(jax.vmap(_online_step, in_axes=(0, 0, 0, None, 0, 0, 0,
+                                                    None)),
+                    in_axes=(0, 0, 0, None, 0, 0, 0, None))
+
+    def body(carry, inp):
+        acc, m, l = carry
+        j, (kb, vb) = inp
+        valid = _tile_mask(j, tile, R, sq, causal, kvlen, qoff)
+        return step(q3, kb, vb, valid, acc, m, l, scale), None
+
+    acc0 = jnp.zeros((B, K, R, hd), jnp.float32)
+    m0 = jnp.full((B, K, R, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, R, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nt), (kt, vt)))
+    return _finalize(acc, l)
+
+
+def attention_packed_reference(q, kq: QTensor, vq: QTensor, *, kv_len=None,
+                               causal: bool = False, q_offset=0,
+                               tile: int = DEFAULT_TILE):
+    """The unfused serving path the kernel replaces, staged as SEPARATE jits:
+    dequantize the whole cache to f32 in HBM (unpack + decode via
+    ``QTensor.dequantize``), then attend. The bitwise-parity oracle for
+    :func:`attention_packed` — and the honest wall-clock comparator in
+    ``benchmarks.run --only attention``."""
+    k = kq.dequantize(jnp.float32)
+    v = vq.dequantize(jnp.float32)
+    return attention_reference(q, k, v, kv_len=kv_len, causal=causal,
+                               q_offset=q_offset, tile=tile)
+
+
+def autotune_attention_tile(backend: str, n_bits: int, *,
+                            candidates=(64, 128, 256, 512),
+                            shape=(2, 2048, 4, 128), reps: int = 3,
+                            fmt: F2PFormat | None = None) -> int:
+    """Time :func:`attention_packed` over candidate kv-tile lengths on a
+    decode-shaped problem and install the winner in the tile table. Returns
+    the winning tile. Mirrors ``f2p_matmul.autotune_matmul_tiles``."""
+    import time
+
+    import numpy as np
+
+    from repro.core import qtensor as QT
+    from repro.core.f2p import Flavor
+
+    if fmt is None:
+        fmt = F2PFormat(n_bits, 2, Flavor.SR, signed=True)
+    B, S, K, hd = shape
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, 1, 2 * K, hd)).astype(np.float32))
+    kd = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    vd = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    kq = QT.quantize(kd, fmt, block=hd, packed=True, backend="xla")
+    vq = QT.quantize(vd, fmt, block=hd, packed=True, backend="xla")
+    best, best_t = None, DEFAULT_TILE
+    for t in candidates:
+        if t > S:
+            continue
+
+        def run():
+            return attention_packed(q, kq, vq, kv_len=S - 1, backend=backend,
+                                    tile=t)
+
+        run().block_until_ready()  # compile outside the clock
+        t0 = time.perf_counter()
+        for _ in range(max(1, reps)):
+            run().block_until_ready()
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, best_t = dt, t
+    set_attention_tile(backend, n_bits, best_t)
+    return best_t

@@ -32,6 +32,28 @@ WEIGHT_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 
 M_T, N_T, K_T = 128, 256, 256
 
+# Per-(backend, n_bits) (M_T, N_T, K_T) overrides for the PACKED kernel —
+# the same tile treatment as f2p_attention._TILE_TABLE: narrower formats
+# pack more elements per word tile, so the VMEM/compute balance shifts with
+# n_bits. Seeded by autotune_matmul_tiles (benchmarks or operators); the
+# module defaults above apply when a key is absent. Constraints per entry:
+# K % K_T == 0 and K_T % block == 0 at call time, N_T % 32 == 0 (column
+# tiles must land on word boundaries for every n_bits).
+_TILE_TABLE: dict[tuple[str, int], tuple[int, int, int]] = {}
+
+
+def matmul_tiles(backend: str, n_bits: int) -> tuple[int, int, int]:
+    """(M_T, N_T, K_T) for the packed kernel on (backend, n_bits)."""
+    return _TILE_TABLE.get((backend, int(n_bits)), (M_T, N_T, K_T))
+
+
+def set_matmul_tiles(backend: str, n_bits: int,
+                     tiles: tuple[int, int, int]) -> None:
+    mt, nt, kt = (int(t) for t in tiles)
+    if nt % 32:
+        raise ValueError(f"N_T {nt} not word-aligned (multiple of 32)")
+    _TILE_TABLE[(backend, int(n_bits))] = (mt, nt, kt)
+
 
 def quantize_weight(w, fmt: F2PFormat = WEIGHT_FMT, block: int = 128,
                     packed: bool = False):
@@ -139,37 +161,46 @@ def _packed_kernel(fmt, block, nk, x_ref, w_ref, s_ref, o_ref):
 
 def f2p_dequant_matmul_packed(x, words, scales, *,
                               fmt: F2PFormat = WEIGHT_FMT, block: int = 128,
-                              interpret: bool | None = None):
+                              interpret: bool | None = None,
+                              tiles: tuple[int, int, int] | None = None):
     """y = x @ dequant(unpack(words), scales); words [K, packed_words(N)]
-    uint32 from ``quantize_weight(..., packed=True)``."""
+    uint32 from ``quantize_weight(..., packed=True)``. ``tiles=None``
+    resolves (M_T, N_T, K_T) from the per-(backend, n_bits) tile table."""
     if interpret is None:
         interpret = dispatch.pallas_variant() == dispatch.PALLAS_INTERPRET
+    if tiles is None:
+        b = dispatch.PALLAS_INTERPRET if interpret else dispatch.PALLAS
+        tiles = matmul_tiles(b, fmt.n_bits)
     return _dequant_matmul_packed_jit(x, words, scales, fmt=fmt, block=block,
-                                      interpret=bool(interpret))
+                                      interpret=bool(interpret),
+                                      tiles=tuple(int(t) for t in tiles))
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "block", "interpret", "tiles"))
 def _dequant_matmul_packed_jit(x, words, scales, *, fmt: F2PFormat,
-                               block: int, interpret: bool):
+                               block: int, interpret: bool,
+                               tiles: tuple[int, int, int]):
+    mt0, nt0, kt0 = tiles
     M, K = x.shape
     N = scales.shape[-1]
     K2, W = words.shape
-    assert K == K2 and K % K_T == 0 and K_T % block == 0
+    assert K == K2 and K % kt0 == 0 and kt0 % block == 0
     assert W == packed_words(N, fmt.n_bits), (W, N, fmt.n_bits)
-    mt, nt = min(M_T, M), min(N_T, N)
+    mt, nt = min(mt0, M), min(nt0, N)
     assert M % mt == 0 and N % nt == 0
     if nt != N:
         # multi-tile columns: tiles must land on word boundaries
         assert nt % 32 == 0, f"column tile {nt} not word-aligned"
     wt = packed_words(nt, fmt.n_bits)
-    grid = (M // mt, N // nt, K // K_T)
+    grid = (M // mt, N // nt, K // kt0)
     return pl.pallas_call(
-        functools.partial(_packed_kernel, fmt, block, K // K_T),
+        functools.partial(_packed_kernel, fmt, block, K // kt0),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((mt, K_T), lambda i, j, k: (i, k)),
-            pl.BlockSpec((K_T, wt), lambda i, j, k: (k, j)),
-            pl.BlockSpec((K_T // block, nt), lambda i, j, k: (k, j)),
+            pl.BlockSpec((mt, kt0), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kt0, wt), lambda i, j, k: (k, j)),
+            pl.BlockSpec((kt0 // block, nt), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((mt, nt), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
@@ -217,6 +248,56 @@ def _matmul_packed_xla(x, words, scales, *, fmt=WEIGHT_FMT, block=128):
     N = scales.shape[-1]
     codes = unpack_bits(words, fmt.n_bits, N).astype(jnp.int32)
     return ref_dequant_matmul(x, codes, scales, fmt, block)
+
+
+def autotune_matmul_tiles(backend: str, n_bits: int, *,
+                          candidates=((128, 256, 256), (128, 128, 256),
+                                      (64, 256, 128), (128, 256, 128)),
+                          shape=(256, 1024, 1024), reps: int = 3,
+                          fmt: F2PFormat | None = None, block: int = 128
+                          ) -> tuple[int, int, int]:
+    """Time the packed kernel over candidate (M_T, N_T, K_T) tiles on a
+    serve-shaped matmul and install the winner in the tile table (the same
+    treatment as ``f2p_attention.autotune_attention_tile``). ``backend``
+    must be a pallas variant — the xla path has no tiles. Candidates that
+    do not divide the probe shape or violate word/block alignment are
+    skipped. Returns the winning tiles."""
+    import time
+
+    import numpy as np
+
+    if backend not in (dispatch.PALLAS, dispatch.PALLAS_INTERPRET):
+        raise ValueError(f"tile autotune is for pallas variants, not "
+                         f"{backend!r}")
+    interpret = backend == dispatch.PALLAS_INTERPRET
+    if fmt is None:
+        fmt = F2PFormat(n_bits, 2, Flavor.SR, signed=True)
+    M, K, N = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    words, scales = quantize_weight(w, fmt, block=block, packed=True)
+    best, best_t = None, (M_T, N_T, K_T)
+    for t in candidates:
+        mt, nt, kt = t
+        if K % kt or kt % block or nt % 32 or M % min(mt, M) \
+                or N % min(nt, N):
+            continue
+
+        def run():
+            return f2p_dequant_matmul_packed(x, words, scales, fmt=fmt,
+                                             block=block, interpret=interpret,
+                                             tiles=t)
+
+        run().block_until_ready()  # compile outside the clock
+        t0 = time.perf_counter()
+        for _ in range(max(1, reps)):
+            run().block_until_ready()
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best, best_t = dt, t
+    set_matmul_tiles(backend, n_bits, best_t)
+    return best_t
 
 
 def dequant_matmul(x, codes, scales, *, fmt: F2PFormat = WEIGHT_FMT,

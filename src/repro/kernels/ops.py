@@ -16,9 +16,9 @@ import math
 
 import jax.numpy as jnp
 
-from repro.core.f2p import F2PFormat
-from repro.core.qtensor import (QTensor, dequantize_tree, quantize_tree)
 from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat
+from repro.core.qtensor import QTensor, dequantize_tree, quantize_tree
 from repro.kernels import dispatch
 from repro.kernels import f2p_quant as K  # noqa: F401  (registers backends)
 

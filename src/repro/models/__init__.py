@@ -1,3 +1,4 @@
-from repro.models.config import ModelConfig, BlockSpec, dense_pattern, jamba_pattern, xlstm_pattern
-from repro.models.model import (init_params, train_forward, prefill,
-                                decode_step, init_caches)
+from repro.models.config import (BlockSpec, ModelConfig, dense_pattern,
+                                 jamba_pattern, xlstm_pattern)
+from repro.models.model import (decode_step, init_caches, init_params,
+                                prefill, train_forward)

@@ -14,14 +14,14 @@ codes are whole rows, so slab writes never straddle a word boundary.
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_rope, truncnorm_init
-from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
 from repro.core.qtensor import QTensor
+from repro.kernels.f2p_attention import attention_packed
+from repro.models.common import apply_rope, truncnorm_init
 
 KV_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
 
@@ -250,8 +250,16 @@ def attention_apply(params, x, cfg, *, mode: str, cache=None, pos_offset=0,
     elif mode == "decode":
         assert S == 1
         new_cache = _cache_write_decode(cache, k, v, pos_offset)
-        kc, vc = _cache_read(new_cache, cfg)
-        out = _attend(q, kc, vc, cfg, causal=False, kv_len=pos_offset + 1)
+        if (cfg.fused_attention and isinstance(new_cache["k"], QTensor)
+                and new_cache["k"].packed):
+            # fused path: stream the packed uint32 KV words through the
+            # flash-style kernel — the cache is never dequantized in HBM
+            out = attention_packed(q, new_cache["k"], new_cache["v"],
+                                   kv_len=pos_offset + 1)
+        else:
+            kc, vc = _cache_read(new_cache, cfg)
+            out = _attend(q, kc, vc, cfg, causal=False,
+                          kv_len=pos_offset + 1)
     else:
         raise ValueError(mode)
     proj = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])

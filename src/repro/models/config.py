@@ -66,6 +66,10 @@ class ModelConfig:
     # which attention implementation train/prefill uses
     attn_impl: Literal["naive", "chunked"] = "naive"
     attn_chunk: int = 2048
+    # decode: fused flash-style attention straight off the bit-packed F2P KV
+    # cache (kernels/f2p_attention.py) instead of dequantizing the whole
+    # cache per step; only engages when the live cache is a packed QTensor
+    fused_attention: bool = False
 
     # --- distribution knobs (consumed by models.sharding) ---
     fsdp: bool = False                     # shard params over "data" too

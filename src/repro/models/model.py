@@ -16,9 +16,10 @@ from repro.models import attention as A
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.models import xlstm as XL
-from repro.models.common import (rms_norm, sinusoidal_positions,
-                                 softmax_cross_entropy, truncnorm_init,
-                                 init_swiglu, swiglu)
+from repro.models.common import (init_swiglu, rms_norm,
+                                 sinusoidal_positions,
+                                 softmax_cross_entropy, swiglu,
+                                 truncnorm_init)
 from repro.models.config import BlockSpec, ModelConfig
 from repro.models.sharding import constrain
 

@@ -1,3 +1,4 @@
-from repro.optim.adamw import AdamWConfig, init_state, apply_updates, lr_at
-from repro.optim.compress import (CompressionConfig, compress_decompress,
-                                  init_residuals, compressed_psum, GRAD_FMT)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state, lr_at
+from repro.optim.compress import (GRAD_FMT, CompressionConfig,
+                                  compress_decompress, compressed_psum,
+                                  init_residuals)

@@ -40,8 +40,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
 from repro.core.qtensor import QTensor
 
 GRAD_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
@@ -64,8 +64,11 @@ def _roundtrip(x, fmt: F2PFormat, block: int):
     """quantize+dequantize x through the canonical QTensor codec (any shape;
     last axis blocked + padded, leading-dim shardings preserved — see
     core/qtensor.py on why leading dims are never merged)."""
-    qt = QT.quantize(x.astype(jnp.float32), fmt, block=block)
-    return qt.dequantize(jnp.float32)
+    # backend pinned: these run inside jit/shard_map traces, where xla is
+    # the only workable backend (a pallas_call has no shard_map replication
+    # rule) — an ambient F2P_BACKEND override must not leak in here
+    qt = QT.quantize(x.astype(jnp.float32), fmt, block=block, backend="xla")
+    return qt.dequantize(jnp.float32, backend="xla")
 
 
 def compress_decompress(grads, residuals, ccfg: CompressionConfig):
@@ -145,11 +148,12 @@ def compressed_psum(g: jnp.ndarray, axis_name: str, ccfg: CompressionConfig):
     cols = shard_sum.shape[-1]
     # quantize the local SUM shard, fold the mean into the scales
     qt = QT.quantize(shard_sum.astype(jnp.float32), ccfg.fmt,
-                     block=ccfg.block, packed=packed).scale_by(1.0 / w)
+                     block=ccfg.block, packed=packed,
+                     backend="xla").scale_by(1.0 / w)
     # exchange compressed: the QTensor's leaves go on the wire directly
     codes_all = jax.lax.all_gather(qt.codes, axis_name, axis=0, tiled=True)
     scale_all = jax.lax.all_gather(qt.scales, axis_name, axis=0, tiled=True)
     full = QTensor.from_parts(codes_all, scale_all, ccfg.fmt, ccfg.block,
                               (codes_all.shape[0], cols), packed=packed)
-    out = full.dequantize(jnp.float32)
+    out = full.dequantize(jnp.float32, backend="xla")
     return out[:n].reshape(g.shape).astype(g.dtype)

@@ -31,12 +31,29 @@ class ServeConfig:
     # bit-packed quantized KV storage (DESIGN.md §9); None defers to the
     # process default (F2P_PACKED env)
     packed_kv: bool | None = None
+    # fused flash-style attention over the packed KV words during decode
+    # (kernels/f2p_attention.py §11): the cache stream stays n_bits/8 bytes
+    # per element through attention instead of being dequantized to f32
+    # every step. Engages only when the live cache is a packed QTensor
+    # (quantized_kv=True and packed_kv resolving True), else the decode
+    # step falls back to the dequantize-then-attend path.
+    fused_attention: bool = False
     # donate the cache buffers to the jitted prefill/decode steps so each
     # step updates the KV cache in place instead of allocating a fresh copy
     donate_caches: bool = True
 
 
+def _serve_model_cfg(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
+    """Serve-time model-config overrides: ServeConfig knobs that change how
+    the jitted steps run against the same params/caches."""
+    if scfg.fused_attention and not cfg.fused_attention:
+        cfg = dataclasses.replace(cfg, fused_attention=True)
+    return cfg
+
+
 def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
+    cfg = _serve_model_cfg(cfg, scfg)
+
     def prefill_step(params, batch, caches):
         return prefill(params, batch, cfg, caches)
 
@@ -45,6 +62,7 @@ def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
 
 def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
     """serve_step(params, caches, token [B,1], pos) -> (next_token, caches)."""
+    cfg = _serve_model_cfg(cfg, scfg)
 
     def serve_step(params, caches, token, pos):
         logits, caches = decode_step(params, token, pos, caches, cfg)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.counters import CounterArray, f2p_li_grid
-from repro.telemetry.heavy_hitters import HeavyHitterTable, HeavyHittersReport
+from repro.telemetry.heavy_hitters import HeavyHittersReport, HeavyHitterTable
 
 __all__ = ["ExpertLoadTracker", "FlowStats", "HeavyHitterTable",
            "HeavyHittersReport"]

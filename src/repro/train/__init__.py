@@ -1,2 +1,2 @@
-from repro.train.step import make_train_step, init_train_state
 from repro.train import checkpoint
+from repro.train.step import init_train_state, make_train_step

@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.f2p import F2PFormat, Flavor
 from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
 from repro.core.qtensor import QTensor
 from repro.faults.inject import crashpoint
 from repro.kernels.bits import packed_nbytes

@@ -8,7 +8,6 @@ math; on the wire-level path the same codes ride reduce_scatter/all_gather —
 see optim.compress.compressed_psum)."""
 from __future__ import annotations
 
-
 import jax
 
 from repro.models import train_forward

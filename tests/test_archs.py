@@ -8,8 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, full_config, smoke_config, SHAPES, \
-    shape_is_applicable
+from repro.configs import (ARCH_IDS, SHAPES, full_config,
+                           shape_is_applicable, smoke_config)
 from repro.models import (decode_step, init_caches, init_params, prefill,
                           train_forward)
 from repro.optim import AdamWConfig, CompressionConfig

@@ -1,0 +1,213 @@
+"""Fused packed-KV attention (kernels/f2p_attention, DESIGN.md §11).
+
+Pins the ISSUE-7 acceptance bar: the fused kernel is BITWISE-identical to
+the unpack-then-dequant-then-attend reference on the xla and
+pallas_interpret backends across formats x n_bits in {6, 8, 16} x odd
+sequence lengths with masked tails; the online-softmax tile loop matches
+naive_attention numerically; empty-cache zero-code rows beyond kv_len never
+leak into the output; and the model/serve wiring (ModelConfig/
+ServeConfig.fused_attention) produces the same decode results as the
+dequantize-whole-cache path it replaces.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qtensor as QT
+from repro.core.f2p import F2PFormat, Flavor
+from repro.kernels import f2p_attention as FA
+from repro.models.attention import init_cache, naive_attention
+
+FORMATS = [F2PFormat(6, 2, Flavor.SR, signed=True),
+           F2PFormat(8, 2, Flavor.SR, signed=True),
+           F2PFormat(16, 2, Flavor.LR, signed=True)]
+
+
+def _qkv(seed, B=2, S=37, K=2, G=2, hd=32, Sq=1):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Sq, K * G, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    return q, k, v
+
+
+def _cache(x, fmt):
+    return QT.quantize(x, fmt, block=x.shape[-1], packed=True, backend="xla")
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f"n{f.n_bits}")
+@pytest.mark.parametrize("S", [5, 37])
+def test_xla_fused_bitwise_vs_reference(fmt, S):
+    """xla fuses unpack+decode+attend under ONE jit; the reference stages
+    the same ops as separate jits through QTensor.dequantize. Odd S forces
+    a ragged last tile; kv_len < S leaves a masked zero-contribution tail."""
+    q, k, v = _qkv(0, S=S)
+    kq, vq = _cache(k, fmt), _cache(v, fmt)
+    for tile in (16, S):
+        ref = FA.attention_packed_reference(q, kq, vq, kv_len=S - 2,
+                                            tile=tile)
+        got = FA.attention_packed(q, kq, vq, kv_len=S - 2, backend="xla",
+                                  tile=tile)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f"n{f.n_bits}")
+def test_pallas_interpret_matches_xla(fmt):
+    """The Pallas kernel body runs the same shared tile math as the xla
+    scan — interpret mode must agree bitwise on CPU."""
+    q, k, v = _qkv(1, S=29)
+    kq, vq = _cache(k, fmt), _cache(v, fmt)
+    a = FA.attention_packed(q, kq, vq, kv_len=27, backend="xla", tile=8)
+    b = FA.attention_packed(q, kq, vq, kv_len=27,
+                            backend="pallas_interpret", tile=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_causal_multiquery_bitwise_and_vs_naive():
+    """Sq > 1 with causal masking: rows fold as r = g*Sq + s, so the kernel
+    must recover per-row query positions q_offset + r % Sq."""
+    fmt = FORMATS[1]
+    q, k, v = _qkv(2, S=29, Sq=5, G=3)
+    kq, vq = _cache(k, fmt), _cache(v, fmt)
+    qoff = 7
+    kv_len = qoff + 5
+    args = dict(kv_len=kv_len, causal=True, q_offset=qoff, tile=8)
+    ref = FA.attention_packed_reference(q, kq, vq, **args)
+    for b in ("xla", "pallas_interpret"):
+        got = FA.attention_packed(q, kq, vq, backend=b, **args)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    nav = naive_attention(q, kq.dequantize(jnp.float32),
+                          vq.dequantize(jnp.float32), causal=True,
+                          q_offset=qoff, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(nav),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_reference_matches_naive_attention():
+    q, k, v = _qkv(3, S=41)
+    ref = FA.attention_reference(q, k, v, kv_len=33, tile=16)
+    nav = naive_attention(q, k, v, causal=False, kv_len=33)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(nav),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("fmt", [FORMATS[1],
+                                 F2PFormat(10, 2, Flavor.LR, signed=True)],
+                         ids=["sr8", "lr10"])
+def test_empty_cache_zero_code_rows(fmt):
+    """Slots beyond kv_len hold the flavor-dependent zero code (NONZERO
+    payload for LR). The mask must make them exact zero contributions: the
+    output equals the same cache with arbitrary garbage in the tail."""
+    cfg = dataclasses.replace(_model_cfg(), head_dim=16)
+    cache = init_cache(cfg, 1, 8, True, jnp.float32, fmt=fmt, packed=True)
+    kq = vq = cache["k"]
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 1, cfg.n_heads, 16)
+                               ).astype(np.float32))
+    # kv_len=0: fully masked -> exact zeros, no NaNs from the 0/0 guard
+    z = FA.attention_packed(q, kq, vq, kv_len=0, backend="xla", tile=4)
+    np.testing.assert_array_equal(np.asarray(z), 0.0)
+    # garbage tail beyond kv_len must not change the output
+    kv_len = 3
+    tail = jnp.asarray(rng.integers(0, 2 ** fmt.n_bits,
+                                    size=kq.codes.shape).astype(np.uint32))
+    garbled = QT.QTensor.from_parts(
+        kq.codes.at[:, kv_len:].set(tail[:, kv_len:]), kq.scales,
+        kq.fmt, kq.block, kq.shape, packed=True)
+    a = FA.attention_packed(q, kq, vq, kv_len=kv_len, backend="xla", tile=4)
+    b = FA.attention_packed(q, garbled, garbled, kv_len=kv_len,
+                            backend="xla", tile=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rejects_unpacked_or_misblocked_cache():
+    fmt = FORMATS[1]
+    q, k, v = _qkv(5, S=8)
+    unpacked = QT.quantize(k, fmt, block=k.shape[-1], packed=False,
+                           backend="xla")
+    packed = _cache(k, fmt)
+    with pytest.raises(ValueError, match="bit-packed"):
+        FA.attention_packed(q, unpacked, unpacked)
+    misblocked = QT.quantize(k.reshape(2, 8, -1), fmt, block=16,
+                             packed=True, backend="xla")
+    with pytest.raises(ValueError, match="head_dim"):
+        FA.attention_packed(q, misblocked, misblocked)
+
+
+def _model_cfg(**kw):
+    from repro.models.config import ModelConfig
+
+    base = dict(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                d_ff=64, vocab_size=97, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_decode_step_fused_matches_unfused():
+    """ModelConfig.fused_attention flips the decode path onto the kernel;
+    logits must match the dequantize-whole-cache path (same math, online
+    vs full softmax -> allclose, not bitwise)."""
+    from repro.models import decode_step, init_caches, init_params, prefill
+
+    params = init_params(_model_cfg(), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 97)
+    S = 6
+    logits = {}
+    for fused in (False, True):
+        cfg = _model_cfg(fused_attention=fused)
+        caches = init_caches(cfg, 2, 16, quantized_kv=True, packed_kv=True)
+        _, caches = prefill(params, {"tokens": toks[:, :S]}, cfg, caches)
+        lg = None
+        for i in range(3):
+            lg, caches = decode_step(params, toks[:, S + i:S + i + 1],
+                                     jnp.int32(S + i), caches, cfg)
+        logits[fused] = np.asarray(lg)
+    np.testing.assert_allclose(logits[True], logits[False],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_serve_engine_fused_matches_unfused():
+    """ServeConfig.fused_attention end to end: greedy generations with and
+    without the fused kernel agree token-for-token."""
+    from repro.models import init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = _model_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (2, 5),
+                                            0, cfg.vocab_size))
+    toks = {}
+    for fused in (False, True):
+        scfg = ServeConfig(batch=2, max_seq=32, quantized_kv=True,
+                           packed_kv=True, fused_attention=fused)
+        toks[fused] = Engine(cfg, scfg, params).generate(prompts, 6)
+    np.testing.assert_array_equal(toks[True], toks[False])
+
+
+def test_unpacked_cache_falls_back():
+    """fused_attention=True with an UNPACKED quantized cache must silently
+    take the dequantize path (same results as fused_attention=False)."""
+    from repro.models import decode_step, init_caches, init_params, prefill
+
+    params = init_params(_model_cfg(), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, 97)
+    logits = {}
+    for fused in (False, True):
+        cfg = _model_cfg(fused_attention=fused)
+        caches = init_caches(cfg, 1, 16, quantized_kv=True, packed_kv=False)
+        _, caches = prefill(params, {"tokens": toks[:, :6]}, cfg, caches)
+        lg, _ = decode_step(params, toks[:, 6:7], jnp.int32(6), caches, cfg)
+        logits[fused] = np.asarray(lg)
+    np.testing.assert_array_equal(logits[True], logits[False])
+
+
+def test_tile_table_round_trip():
+    assert FA.attention_tile("xla", 5) == FA.DEFAULT_TILE
+    FA.set_attention_tile("xla", 5, 64)
+    try:
+        assert FA.attention_tile("xla", 5) == 64
+    finally:
+        FA._TILE_TABLE.pop(("xla", 5), None)

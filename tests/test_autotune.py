@@ -8,23 +8,22 @@ across all F2P flavors × h_bits 1-3 × three input distributions.
 """
 import tempfile
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.f2p import F2PFormat, Flavor
-from repro.core.formats import named_format
-from repro.autotune import (HistogramDist, HistSpec, LogNormalDist,
-                            NORM_SPEC, UniformDist, ZipfDist,
+from repro.autotune import (NORM_SPEC, HistogramDist, HistSpec,
+                            LogNormalDist, UniformDist, ZipfDist,
                             candidate_formats, empty_state, expected_mse,
                             leaf_summary, max_rel_error, solve, to_dist,
                             update)
+from repro.autotune import calibrate as CAL
 from repro.autotune.policy import (FormatPolicy, LeafSpec, PolicyRule,
                                    _leaf_bits, _leaf_error, leaf_path_str,
                                    path_from_keystr)
-from repro.autotune import calibrate as CAL
+from repro.core.f2p import F2PFormat, Flavor
+from repro.core.formats import named_format
 
 
 # ---------------------------------------------------------------------------
@@ -463,8 +462,8 @@ def test_kv_cache_policy_formats():
 
 
 def test_fl_client_policy_per_leaf():
-    from repro.fl.client import ClientConfig, _quantize_delta
     from repro.core.qtensor import QTensor
+    from repro.fl.client import ClientConfig, _quantize_delta
 
     rng = np.random.default_rng(0)
     delta = {"wq": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),

@@ -5,7 +5,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import compare, flatten_metrics, main
+from benchmarks.check_regression import (compare, flatten_metrics, main,
+                                         removed_metrics)
 
 
 def _entry(quick=True, **metrics):
@@ -49,12 +50,58 @@ def test_compare_directions():
     assert [r["metric"] for r in regs] == ["b_per_s"]
 
 
-def test_compare_new_and_missing_metrics_note_not_fail():
+def test_compare_new_and_missing_scalar_metrics_note_not_fail():
+    """Scalar (non-section) metrics keep the old semantics: one-sided ones
+    are notes, never failures."""
     base = [_entry(a_us=100.0)]
     regs, notes = compare(base, _entry(c_us=5.0), 2.5)
     assert regs == []
     assert any("new metric" in n for n in notes)
     assert any("missing from fresh" in n for n in notes)
+
+
+def test_removed_gated_section_metric_fails():
+    """A gated metric recorded by the baseline's latest run of a section the
+    candidate also ran must FAIL when the fresh run drops it."""
+    base = [_entry(kernels={"xla": {"quantize_us": 100.0, "pack_us": 9.0}})]
+    cand = _entry(only="", kernels={"xla": {"quantize_us": 90.0}})
+    assert removed_metrics(base, cand) == ["kernels.xla.pack_us"]
+    regs, notes = compare(base, cand, 2.5)
+    assert [r["metric"] for r in regs] == ["kernels.xla.pack_us"]
+    assert regs[0]["removed"] is True
+    # failed keys are not double-reported as notes
+    assert not any("pack_us" in n for n in notes)
+
+
+def test_removed_whole_section_fails_full_run_only():
+    """A full run is held to every baseline section (dropping a bench from
+    run.py fails); an --only subset run is exempt for sections it skipped."""
+    base = [_entry(kernels={"xla": {"quantize_us": 100.0}},
+                   packed={"xla": {"unpack_us": 5.0}})]
+    full = _entry(only="", kernels={"xla": {"quantize_us": 90.0}},
+                  packed=None)
+    assert removed_metrics(base, full) == ["packed.xla.unpack_us"]
+    subset = _entry(only="kernels", kernels={"xla": {"quantize_us": 90.0}},
+                    packed=None)
+    assert removed_metrics(base, subset) == []
+    regs, _ = compare(base, subset, 2.5)
+    assert regs == []
+
+
+def test_removed_check_uses_latest_section_run_and_skips_ungated():
+    """Only the most recent baseline run of a section sets expectations —
+    metrics already dropped before the last run stay notes — and ungated
+    leaves (no _us/_per_s suffix, ungated prefixes) never fail."""
+    base = [_entry(kernels={"xla": {"old_us": 50.0, "quantize_us": 100.0}}),
+            _entry(kernels={"xla": {"quantize_us": 95.0, "gbps": 3.0}},
+                   serve={"decode_tok_us": 7.0})]
+    cand = _entry(only="", kernels={"xla": {"quantize_us": 90.0}}, serve=None)
+    # old_us was already gone from the latest kernels run; gbps is not a
+    # timing; serve.* is an ungated prefix
+    assert removed_metrics(base, cand) == []
+    regs, notes = compare(base, cand, 2.5)
+    assert regs == []
+    assert any("old_us" in n for n in notes)
 
 
 def test_main_passes_and_fails(tmp_path):

@@ -33,12 +33,16 @@ def test_all_ops_register_all_backends():
         assert set(dispatch.implementations(op)) == set(dispatch.BACKENDS), op
 
 
-def test_default_resolution_matches_platform():
+def test_default_resolution_matches_platform(monkeypatch):
+    # the DEFAULT policy under test — shield it from an ambient override
+    # (the CI kernel-parity cell exports F2P_BACKEND=pallas_interpret)
+    monkeypatch.delenv("F2P_BACKEND", raising=False)
     expect = "pallas" if jax.default_backend() == "tpu" else "xla"
     assert dispatch.resolve_backend() == expect
 
 
-def test_resolution_inside_trace_is_xla_and_trace_safe():
+def test_resolution_inside_trace_is_xla_and_trace_safe(monkeypatch):
+    monkeypatch.delenv("F2P_BACKEND", raising=False)
     seen = []
 
     @jax.jit

@@ -1,9 +1,8 @@
 """Fault-injection harness (repro.faults): plan determinism, wire
 corruption, crash points, and the serve-engine wrapper."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.core import qtensor as QT
 from repro.core.f2p import F2PFormat, Flavor

@@ -5,11 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models import (init_caches, init_params, prefill, decode_step,
+from repro.models import attention as A
+from repro.models import (decode_step, init_caches, init_params, prefill,
                           train_forward)
 from repro.models.config import (BlockSpec, ModelConfig, jamba_pattern,
                                  xlstm_pattern)
-from repro.models import attention as A
 
 
 def tiny(name="tiny", **kw):

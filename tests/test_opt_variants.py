@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.models import attention as A
 from repro.models import init_params, train_forward
 from repro.models.config import BlockSpec, ModelConfig
-from repro.models import attention as A
 
 
 BASE = ModelConfig(name="v", n_layers=2, d_model=64, n_heads=6, n_kv_heads=2,

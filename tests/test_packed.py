@@ -253,8 +253,8 @@ def test_packed_kv_cache_decode_parity():
 
 
 def test_packed_kv_empty_cache_decodes_to_zero():
-    from repro.models.attention import init_cache
     from repro.configs import smoke_config
+    from repro.models.attention import init_cache
 
     cfg = smoke_config("llama3_2_3b")
     for fmt in (FMT8, F2PFormat(8, 2, Flavor.LR, signed=True)):

@@ -1,11 +1,10 @@
 """Tests for the batched F2P sketch engine (DESIGN.md §6): hashing, the
 counter_advance/counter_estimate kernel ops, CounterArray consistency,
 count-min behavior, streaming ingest, and heavy-hitter recovery."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import counters as C
 from repro.core.f2p import F2PFormat, Flavor

@@ -8,8 +8,9 @@ import numpy as np
 
 from repro.data import DataConfig, global_batch, host_batch
 from repro.models.config import ModelConfig
-from repro.optim import (AdamWConfig, CompressionConfig, compressed_psum,
-                         compress_decompress, init_residuals)
+from repro.optim import (AdamWConfig, CompressionConfig,
+                         compress_decompress, compressed_psum,
+                         init_residuals)
 from repro.train import checkpoint, init_train_state, make_train_step
 
 
