@@ -63,7 +63,7 @@ _SUFFIXES = {"_us": "low", "_per_s": "high"}
 # wall time is dominated by injected straggler delays and quarantine scans
 # (a chaos measurement, not a perf one) — trajectory-only; the fault-free
 # ``fl_fleet.fleet_round_us`` stays gated.
-_UNGATED_PREFIXES = ("table5_us", "table6_us", "serve.",
+_UNGATED_PREFIXES = ("table5_us", "table6_us", "serve.", "serve_batch.",
                      "fl_fleet.fleet_faulted.")
 
 

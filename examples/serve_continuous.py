@@ -1,0 +1,76 @@
+"""Continuous-batching example: N staggered requests through the block-paged
+packed-F2P KV pool (DESIGN.md §12).
+
+Serves a queue of mixed-length requests arriving at different times through
+:class:`repro.serve.BatchedEngine` — dynamic admission into fixed decode
+slots over a paged pool of packed-KV slabs — then replays every request
+one-at-a-time through the sequential :class:`repro.serve.Engine` and asserts
+the greedy outputs are BIT-FOR-BIT identical. Reports aggregate tokens/s for
+both, plus the pool's packed-vs-logical-f32 footprint.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import (BatchedEngine, BatchedServeConfig, Engine, Request,
+                         ServeConfig)
+
+
+def main():
+    cfg = smoke_config("llama3_2_3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+    n_req, slots, max_seq = 12, 4, 64
+    reqs = [Request(uid=u + 1,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 25))
+                                        ).astype(np.int32),
+                    max_new=int(rng.integers(8, 25)),
+                    arrival=3 * u)           # staggered arrivals
+            for u in range(n_req)]
+
+    eng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
+                                                max_seq=max_seq), params)
+    eng.run(reqs)                            # warmup: compile outside clock
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    dt_b = time.perf_counter() - t0
+    ntok = sum(len(v) for v in out.values())
+
+    seq = Engine(cfg, ServeConfig(batch=1, max_seq=max_seq,
+                                  quantized_kv=True, packed_kv=True,
+                                  fused_attention=True), params)
+    for r in reqs:                           # warmup each prompt shape
+        seq.generate(r.tokens[None], 2)
+    t0 = time.perf_counter()
+    want = {r.uid: np.asarray(seq.generate(r.tokens[None], r.max_new)[0],
+                              np.int32) for r in reqs}
+    dt_s = time.perf_counter() - t0
+
+    for r in reqs:
+        assert np.array_equal(out[r.uid], want[r.uid]), \
+            f"request {r.uid}: batched output diverged from sequential"
+    print(f"{n_req} requests bit-for-bit identical to the sequential engine")
+
+    pool = eng.stats["pool"]
+    print(f"batched   : {ntok / dt_b:8.0f} tok/s "
+          f"({slots} slots, occupancy {eng.stats['slot_occupancy']:.2f}, "
+          f"{eng.stats.get('preemptions', 0)} preemptions)")
+    print(f"sequential: {ntok / dt_s:8.0f} tok/s (batch=1 replay)")
+    print(f"speedup   : {dt_s / dt_b:8.2f}x")
+    print(f"KV pool   : {pool['pool_bytes_packed'] / 1e3:.1f} KB packed vs "
+          f"{pool['pool_bytes_logical_f32'] / 1e3:.1f} KB logical f32 "
+          f"({pool['peak_used']}/{pool['n_pages']} pages peak)")
+
+
+if __name__ == "__main__":
+    main()

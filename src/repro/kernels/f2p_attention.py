@@ -151,16 +151,18 @@ def _attention_xla(q3, kw, ks, vw, vs, lens, *, fmt_k, fmt_v, sq, causal,
     # [nt, B, K, tile, hd]: per-(batch, head) tiles in kernel layout
     kt = k.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
     vt = v.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
-    kvlen, qoff = lens[0, 0], lens[0, 1]
+    kvlen, qoff = lens[:, 0], lens[:, 1]          # per-batch [B]
     scale = 1.0 / math.sqrt(hd)
     step = jax.vmap(jax.vmap(_online_step, in_axes=(0, 0, 0, None, 0, 0, 0,
                                                     None)),
-                    in_axes=(0, 0, 0, None, 0, 0, 0, None))
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, None))
 
     def body(carry, inp):
         acc, m, l = carry
         j, (kb, vb) = inp
-        valid = _tile_mask(j, tile, R, sq, causal, kvlen, qoff)
+        valid = jax.vmap(
+            lambda kl, qo: _tile_mask(j, tile, R, sq, causal, kl, qo)
+        )(kvlen, qoff)                            # [B, R, tile]
         return step(q3, kb, vb, valid, acc, m, l, scale), None
 
     acc0 = jnp.zeros((B, K, R, hd), jnp.float32)
@@ -235,7 +237,7 @@ def _attention_pallas(q3, kw, ks, vw, vs, lens, *, fmt_k, fmt_v, sq, causal,
             pl.BlockSpec((1, tile, 1, 1), lambda b, h, j: (b, j, h, 0)),
             pl.BlockSpec((1, tile, 1, Wv), lambda b, h, j: (b, j, h, 0)),
             pl.BlockSpec((1, tile, 1, 1), lambda b, h, j: (b, j, h, 0)),
-            pl.BlockSpec((1, 2), lambda b, h, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, h, j: (b, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, R, hd), lambda b, h, j: (b, h, 0, 0)),
@@ -283,6 +285,17 @@ def _check_cache(qt: QTensor, hd: int, what: str) -> None:
                          f"block={qt.block} shape={qt.shape}")
 
 
+def _make_lens(kv_len, q_offset, B: int, S: int):
+    """Per-batch ``[B, 2]`` int32 (kv_len, q_offset). Scalars broadcast to
+    every batch row; ``[B]`` vectors thread per-slot lengths (the
+    continuous-batching engine's ragged decode)."""
+    kv_len = jnp.asarray(S if kv_len is None else kv_len, jnp.int32)
+    kv_len = jnp.minimum(kv_len, S)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    return jnp.stack([jnp.broadcast_to(kv_len, (B,)),
+                      jnp.broadcast_to(q_offset, (B,))], axis=1)
+
+
 def attention_packed(q, kq: QTensor, vq: QTensor, *, kv_len=None,
                      causal: bool = False, q_offset=0,
                      backend: str | None = None, tile: int | None = None):
@@ -293,7 +306,8 @@ def attention_packed(q, kq: QTensor, vq: QTensor, *, kv_len=None,
     canonical cache layout of ``models.attention.init_cache``). ``kv_len``
     masks cache positions >= kv_len (decode: pos + 1); ``causal`` adds the
     in-window causal mask using ``q_offset`` as the first query position.
-    Returns ``[B, Sq, H, hd]`` in q's dtype.
+    Both accept a scalar or a per-batch ``[B]`` vector (per-slot lengths in
+    the continuous-batching engine). Returns ``[B, Sq, H, hd]`` in q's dtype.
     """
     B, Sq, H, hd = q.shape
     _check_cache(kq, hd, "kq")
@@ -305,10 +319,7 @@ def attention_packed(q, kq: QTensor, vq: QTensor, *, kv_len=None,
     if tile is None:
         tile = attention_tile(b, kq.fmt.n_bits)
     tile = max(1, min(int(tile), S))
-    kv_len = S if kv_len is None else jnp.minimum(kv_len, S)
-    lens = jnp.stack([jnp.asarray(kv_len, jnp.int32).reshape(()),
-                      jnp.asarray(q_offset, jnp.int32).reshape(())]
-                     ).reshape(1, 2)
+    lens = _make_lens(kv_len, q_offset, B, S)
     o3 = fn(_fold_q(q, K), kq.codes, kq.scales, vq.codes, vq.scales, lens,
             fmt_k=kq.fmt, fmt_v=vq.fmt, sq=Sq, causal=bool(causal), tile=tile)
     return _unfold_o(o3, Sq, q.dtype)
@@ -323,10 +334,7 @@ def attention_reference(q, k, v, *, kv_len=None, causal: bool = False,
     B, Sq, H, hd = q.shape
     S, K = k.shape[1], k.shape[2]
     tile = max(1, min(int(tile), S))
-    kv_len = S if kv_len is None else jnp.minimum(kv_len, S)
-    lens = jnp.stack([jnp.asarray(kv_len, jnp.int32).reshape(()),
-                      jnp.asarray(q_offset, jnp.int32).reshape(())]
-                     ).reshape(1, 2)
+    lens = _make_lens(kv_len, q_offset, B, S)
     o3 = _reference_jit(_fold_q(q, K), k.astype(jnp.float32),
                         v.astype(jnp.float32), lens, sq=Sq,
                         causal=bool(causal), tile=tile)
@@ -344,16 +352,18 @@ def _reference_jit(q3, k, v, lens, *, sq, causal, tile):
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     kt = k.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
     vt = v.reshape(B, nt, tile, K, hd).transpose(1, 0, 3, 2, 4)
-    kvlen, qoff = lens[0, 0], lens[0, 1]
+    kvlen, qoff = lens[:, 0], lens[:, 1]          # per-batch [B]
     scale = 1.0 / math.sqrt(hd)
     step = jax.vmap(jax.vmap(_online_step, in_axes=(0, 0, 0, None, 0, 0, 0,
                                                     None)),
-                    in_axes=(0, 0, 0, None, 0, 0, 0, None))
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, None))
 
     def body(carry, inp):
         acc, m, l = carry
         j, (kb, vb) = inp
-        valid = _tile_mask(j, tile, R, sq, causal, kvlen, qoff)
+        valid = jax.vmap(
+            lambda kl, qo: _tile_mask(j, tile, R, sq, causal, kl, qo)
+        )(kvlen, qoff)                            # [B, R, tile]
         return step(q3, kb, vb, valid, acc, m, l, scale), None
 
     acc0 = jnp.zeros((B, K, R, hd), jnp.float32)

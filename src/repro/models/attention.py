@@ -68,6 +68,14 @@ def _broadcast_kv(k, H):
         B, S, H, hd)
 
 
+def _len_mask(Sk: int, kv_len):
+    """Additive 0/-inf mask over cache positions >= kv_len. Scalar kv_len ->
+    ``[Sk]``; per-batch ``[B]`` kv_len (continuous batching: each slot has
+    its own live length) -> ``[B, Sk]``."""
+    kl = jnp.asarray(kv_len)
+    return jnp.where(jnp.arange(Sk) < kl[..., None], 0.0, -jnp.inf)
+
+
 def _mha_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
     """Head-sharded attention: q/k/v all [B,S,H,hd], head axis constrained to
     the model mesh axis; scores stay device-local."""
@@ -85,7 +93,10 @@ def _mha_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
         qpos = q_offset + jnp.arange(Sq)[:, None]
         mask = jnp.where(jnp.arange(Sk)[None, :] <= qpos, 0.0, -jnp.inf)
     if kv_len is not None:
-        mask = mask + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, -jnp.inf)
+        lm = _len_mask(Sk, kv_len)
+        # scalar: [Sk] folds into the [Sq,Sk] mask; per-batch: [B,Sk] lifts
+        # the mask to [B,1,Sq,Sk] against scores [B,H,Sq,Sk]
+        mask = mask + lm if lm.ndim == 1 else mask + lm[:, None, None, :]
     probs = jax.nn.softmax(scores + mask, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
     return constrain(out, ("batch", None, "heads", None))
@@ -162,7 +173,11 @@ def naive_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None):
         kpos = jnp.arange(Sk)[None, :]
         mask = jnp.where(kpos <= qpos, 0.0, -jnp.inf)
     if kv_len is not None:  # decode: only first kv_len cache slots valid
-        mask = mask + jnp.where(jnp.arange(Sk)[None, :] < kv_len, 0.0, -jnp.inf)
+        lm = _len_mask(Sk, kv_len)
+        # scalar: [Sk]; per-batch [B,Sk] lifts to [B,1,1,Sq,Sk] against the
+        # GQA scores [B,K,G,Sq,Sk]
+        mask = (mask + lm if lm.ndim == 1
+                else mask + lm[:, None, None, None, :])
     probs = jax.nn.softmax(scores + mask, axis=-1).astype(q.dtype)
     return _gqa_out(probs, v)
 
@@ -237,7 +252,10 @@ def attention_apply(params, x, cfg, *, mode: str, cache=None, pos_offset=0,
     k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, K, hd)
     v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, K, hd)
     if cfg.pos == "rope":
-        positions = pos_offset + jnp.arange(S)
+        if jnp.ndim(pos_offset):        # per-slot offsets [B] -> [B, S]
+            positions = jnp.asarray(pos_offset)[:, None] + jnp.arange(S)
+        else:
+            positions = pos_offset + jnp.arange(S)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
@@ -318,14 +336,38 @@ def init_cache(cfg, batch, max_seq, quantized: bool, dtype,
             "v": jnp.zeros((batch, max_seq, K, hd), dtype)}
 
 
+def _rowwise_update(buf, upd, idx):
+    """Per-batch-row dynamic update along the token axis: buf [B, Smax, ...],
+    upd [B, S, ...], idx [B] start positions. Each row writes at its own
+    offset (continuous batching: slots live at different sequence points)."""
+    return jax.vmap(
+        lambda b, u, i: jax.lax.dynamic_update_slice_in_dim(b, u, i, 0)
+    )(buf, upd, idx)
+
+
+def _qt_rowwise_update(qt: QTensor, upd: QTensor, idx):
+    """:func:`_rowwise_update` over a QTensor's codes+scales coherently.
+    Rows never share words in the packed layout (block = head_dim), so the
+    per-row word writes are exact-relocation copies — no repacking."""
+    return QTensor.from_parts(
+        _rowwise_update(qt.codes, upd.codes, idx),
+        _rowwise_update(qt.scales, upd.scales, idx),
+        qt.fmt, qt.block, qt.shape, packed=qt.packed)
+
+
 def _cache_write(cache, k, v, idx):
     if isinstance(cache["k"], QTensor):
         kf, vf = cache["k"].fmt, cache["v"].fmt
         pk = cache["k"].packed
-        return {"k": cache["k"].dynamic_update(quantize_kv(k, kf, pk),
-                                               idx, axis=1),
-                "v": cache["v"].dynamic_update(quantize_kv(v, vf, pk),
-                                               idx, axis=1)}
+        kq, vq = quantize_kv(k, kf, pk), quantize_kv(v, vf, pk)
+        if jnp.ndim(idx):               # per-slot write positions [B]
+            return {"k": _qt_rowwise_update(cache["k"], kq, idx),
+                    "v": _qt_rowwise_update(cache["v"], vq, idx)}
+        return {"k": cache["k"].dynamic_update(kq, idx, axis=1),
+                "v": cache["v"].dynamic_update(vq, idx, axis=1)}
+    if jnp.ndim(idx):
+        return {"k": _rowwise_update(cache["k"], k, idx),
+                "v": _rowwise_update(cache["v"], v, idx)}
     upd = jax.lax.dynamic_update_slice_in_dim
     return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
 

@@ -291,8 +291,15 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (G,) + x.shape), caches)
 
 
-def prefill(params, batch, cfg: ModelConfig, caches):
-    """Consume the prompt; returns (last-token logits [B,V], caches)."""
+def prefill(params, batch, cfg: ModelConfig, caches, last_index=None):
+    """Consume the prompt; returns (last-token logits [B,V], caches).
+
+    ``last_index`` (optional, [B] int): read each row's logits at its own
+    position instead of the final one — bucketed prefill pads ragged prompts
+    to a shape bucket, and the real last token sits at ``len - 1``, not at
+    ``S - 1``. Padded-position cache slots are written but masked off later
+    by per-slot ``kv_len`` (and bitwise-unaffected positions < len, see
+    DESIGN.md §12)."""
     tokens = batch["tokens"]
     x = _embed_tokens(params, tokens, cfg)
     if cfg.pos == "sinusoidal":
@@ -303,18 +310,26 @@ def prefill(params, batch, cfg: ModelConfig, caches):
     x, _, caches = _run_stack(params["blocks"], x, cfg, mode="prefill",
                               caches=caches, cross_kv=cross_kv)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _lm_logits(params, x[:, -1:], cfg)
+    if last_index is not None:
+        x = x[jnp.arange(x.shape[0]), jnp.asarray(last_index)][:, None]
+    else:
+        x = x[:, -1:]
+    logits = _lm_logits(params, x, cfg)
     return logits[:, 0], caches
 
 
 def decode_step(params, token, pos, caches, cfg: ModelConfig, cross_kv=None):
-    """One decode step. token [B,1]; pos scalar int32 (current write index).
-    Returns (logits [B,V], new caches)."""
+    """One decode step. token [B,1]; pos scalar int32 (current write index)
+    or a per-slot [B] vector (continuous batching: every slot decodes at its
+    own sequence point). Returns (logits [B,V], new caches)."""
     x = _embed_tokens(params, token, cfg)
     if cfg.pos == "sinusoidal":
         table = jnp.asarray(sinusoidal_positions(cfg_max_pos(cfg), cfg.d_model),
                             cfg.jnp_dtype)
-        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
+        if jnp.ndim(pos):               # per-slot positions [B] -> [B,1,D]
+            x = x + jnp.take(table, jnp.asarray(pos), axis=0)[:, None]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
     x, _, caches = _run_stack(params["blocks"], x, cfg, mode="decode",
                               caches=caches, pos_offset=pos, cross_kv=cross_kv)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

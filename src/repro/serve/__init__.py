@@ -1,2 +1,15 @@
+from repro.serve.arch import (SupportedArchitecture, arch_for,
+                              make_batched_decode_step, make_batched_prefill,
+                              register_architecture)
+from repro.serve.batched import BatchedEngine, BatchedServeConfig, Request
 from repro.serve.engine import (Engine, ServeConfig, SketchIngestEngine,
                                 make_prefill_step, make_serve_step)
+from repro.serve.paging import (HostKV, PagedKVPool, PageTable, PoolExhausted)
+
+__all__ = [
+    "Engine", "ServeConfig", "SketchIngestEngine", "make_prefill_step",
+    "make_serve_step", "BatchedEngine", "BatchedServeConfig", "Request",
+    "PagedKVPool", "PageTable", "HostKV", "PoolExhausted",
+    "SupportedArchitecture", "arch_for", "register_architecture",
+    "make_batched_prefill", "make_batched_decode_step",
+]

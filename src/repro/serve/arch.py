@@ -1,0 +1,145 @@
+"""Architecture registry for the batched serve engine (DESIGN.md §12).
+
+``SupportedArchitecture`` records, per model *family*, everything the
+continuous-batching engine must not hardcode: whether the family's KV can be
+paged (it has attention layers), whether it carries recurrent per-slot state
+(mamba / xLSTM — their prefill scan consumes every input token, so prompts
+can NOT be bucket-padded), whether co-batched decode is bitwise-identical to
+sequential decode (capacity-based MoE routing couples co-scheduled tokens,
+so it is not), plus the policy defaults (page size, prefill shape buckets)
+and the jitted step factories.
+
+``arch_for(cfg)`` classifies a :class:`~repro.models.config.ModelConfig` by
+its block pattern and resolves the family entry against the concrete config.
+``register_architecture`` is the extension seam ROADMAP item 5's shared
+runtime widens: new families plug in a registry entry instead of editing the
+engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["SupportedArchitecture", "arch_for", "register_architecture",
+           "make_batched_prefill", "make_batched_decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Step factories (family-generic defaults; registry entries may override)
+# ---------------------------------------------------------------------------
+def make_batched_prefill(cfg: ModelConfig):
+    """Batch-1 prefill reading the last REAL token's logits: tokens [1, S]
+    (bucket-padded unless the family forbids it), last_index [1]."""
+
+    def prefill_step(params, tokens, caches, last_index):
+        return prefill(params, {"tokens": tokens}, cfg, caches,
+                       last_index=last_index)
+
+    return prefill_step
+
+
+def make_batched_decode_step(cfg: ModelConfig, *, temperature: float,
+                             seed: int, max_seq: int):
+    """One fused multi-slot decode step.
+
+    step(params, caches, tok [B,1], pos [B], req [B])
+        -> (next_tok [B,1], caches, next_pos [B])
+
+    ``pos`` is per-slot (every request decodes at its own sequence point);
+    ``req`` carries request ids so temperature sampling is a pure function
+    of (engine seed, request id, position) — co-scheduling can never perturb
+    a request's sample stream (ISSUE 8 satellite fix, pinned by
+    tests/test_serve_batched.py)."""
+
+    def step(params, caches, tok, pos, req):
+        logits, caches = decode_step(params, tok, pos, caches, cfg)
+        if temperature > 0:
+            base = jax.random.PRNGKey(seed)
+
+            def sample(r, p, lg):
+                key = jax.random.fold_in(jax.random.fold_in(base, r), p)
+                return jax.random.categorical(key, lg / temperature, -1)
+
+            nxt = jax.vmap(sample)(req, pos, logits)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        # clamp: retired slots keep stepping until a new request joins; their
+        # writes park at the last cache position and are never read
+        return (nxt[:, None].astype(jnp.int32), caches,
+                jnp.minimum(pos + 1, max_seq - 1))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SupportedArchitecture:
+    """Per-family serving contract + policy defaults."""
+    name: str
+    # capability flags
+    paged_kv: bool            # has attention KV worth paging
+    recurrent_state: bool     # mamba/xLSTM per-slot state rides along
+    exact_cobatch: bool       # batched greedy decode == sequential, bitwise
+    # policy defaults
+    page_tokens: int = 8
+    # () = exact-length prefill (recurrent scans consume every token, so
+    # bucket padding would pollute the state); None = engine default buckets
+    prefill_buckets: tuple[int, ...] | None = None
+    # step factories (cfg -> jittable callables)
+    prefill_factory: Callable = make_batched_prefill
+    step_factory: Callable = make_batched_decode_step
+
+
+_REGISTRY: dict[str, SupportedArchitecture] = {}
+
+
+def register_architecture(arch: SupportedArchitecture) -> None:
+    _REGISTRY[arch.name] = arch
+
+
+for _arch in (
+    SupportedArchitecture(name="llama-dense", paged_kv=True,
+                          recurrent_state=False, exact_cobatch=True),
+    SupportedArchitecture(name="moe", paged_kv=True, recurrent_state=False,
+                          # capacity-factor token dropping couples
+                          # co-scheduled tokens: batched != sequential
+                          exact_cobatch=False),
+    SupportedArchitecture(name="ssm-hybrid", paged_kv=True,
+                          recurrent_state=True, exact_cobatch=True,
+                          prefill_buckets=()),
+    SupportedArchitecture(name="xlstm", paged_kv=False, recurrent_state=True,
+                          exact_cobatch=True, prefill_buckets=()),
+):
+    register_architecture(_arch)
+
+
+def _family(cfg: ModelConfig) -> str:
+    mixers = {s.mixer for s in cfg.pattern}
+    if "mamba" in mixers:
+        return "ssm-hybrid"
+    if "mlstm" in mixers or "slstm" in mixers:
+        return "xlstm"
+    if any(s.ff == "moe" for s in cfg.pattern):
+        return "moe"
+    return "llama-dense"
+
+
+def arch_for(cfg: ModelConfig) -> SupportedArchitecture:
+    """The registry entry for ``cfg``'s family, resolved against the
+    concrete pattern (e.g. a hybrid with MoE FFs loses exact_cobatch; a
+    family entry never claims paged KV for a pattern without attention)."""
+    base = _REGISTRY[_family(cfg)]
+    has_attn = any(s.mixer == "attn" for s in cfg.pattern)
+    has_moe = any(s.ff == "moe" for s in cfg.pattern)
+    return dataclasses.replace(
+        base,
+        paged_kv=base.paged_kv and has_attn,
+        exact_cobatch=base.exact_cobatch and not has_moe)

@@ -1,0 +1,400 @@
+"""Continuous-batching serve engine over the block-paged packed-F2P KV pool
+(DESIGN.md §12, ROADMAP item 1).
+
+The sequential :class:`repro.serve.engine.Engine` runs one fixed-shape
+request batch start-to-finish; this engine admits a *dynamic* set of
+requests into a fixed number of decode **slots** so the jitted decode step
+compiles exactly once and every step serves every live request at its own
+sequence position (per-slot ``pos``/``kv_len`` threading through
+``decode_step`` into the fused ``attention_packed`` kernel).
+
+Shape discipline (everything the device sees is fixed-shape):
+
+* decode: one jitted step over ``[slots]`` — per-slot token, position and
+  request id vectors; retired slots keep stepping into a clamped dead
+  position until a new request joins (their output is discarded host-side).
+* prefill: batch-1, prompt padded to a shape **bucket** (jit specializes per
+  bucket, so ragged prompt lengths cost a handful of compiles, not one per
+  length). Families with recurrent state (mamba/xLSTM) scan every input
+  token, so padding would pollute the state — their registry entry sets
+  exact-length prefill instead.
+* admission: prefill KV lands in :class:`~repro.serve.paging.PagedKVPool`
+  pages, then pages are copied word-aligned into the request's slot row and
+  freed. Preemption reverses the copy (slot -> pages, optionally -> host).
+
+Every host<->device sync is batched: the engine runs ``sync_every`` decode
+steps back-to-back, then syncs ONE ``[slots, sync_every]`` token chunk and
+does all bookkeeping (retirement, admission, preemption) at that boundary.
+
+Bitwise contract (families with ``exact_cobatch``): per-request greedy
+outputs are identical to the sequential engine's — pinned by
+tests/test_serve_batched.py and examples/serve_continuous.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_caches
+from repro.models.config import ModelConfig
+from repro.serve.arch import SupportedArchitecture, arch_for
+from repro.serve.paging import HostKV, PagedKVPool, PageTable
+
+__all__ = ["BatchedServeConfig", "BatchedEngine", "Request"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedServeConfig:
+    slots: int                    # decode lanes (the fixed device batch)
+    max_seq: int                  # per-slot cache length (multiple of page)
+    eos: int = -1                 # per-request EOS (device chunk-synced)
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0                 # sampling stream root (folded per request)
+    kv_policy: Any = None         # per-layer KV formats (FormatPolicy|None)
+    page_tokens: int | None = None     # None = family default
+    n_pages: int | None = None         # None = slots*pages_per_slot + bucket
+    prefill_buckets: tuple[int, ...] | None = None  # None = family default
+    sync_every: int = 8           # decode steps per host sync
+    preempt_patience: int = 2     # sync rounds a ready request starves
+                                  # before the longest-tail slot is preempted
+    evict_parked_to_host: bool = True  # parked KV goes to host numpy
+                                       # (pages reclaimed immediately)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray            # prompt [L]
+    max_new: int
+    arrival: int = 0              # global decode-step index of visibility
+
+
+@dataclasses.dataclass
+class _Slot:
+    uid: int
+    prompt_len: int
+    max_new: int
+    tokens: list[int]
+
+
+@dataclasses.dataclass
+class _Parked:
+    uid: int
+    prompt_len: int
+    max_new: int
+    tokens: list[int]
+    pos: int                      # next decode write position
+    last_tok: int
+    table: PageTable | None = None
+    host: HostKV | None = None
+    state: Any = None             # recurrent per-slot leaves (host numpy)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _leaf_set_slot(full, one, slot):
+    """Recurrent cache leaf [G, B, ...] row <- one [G, 1, ...]."""
+    start = (jnp.int32(0), slot) + (jnp.int32(0),) * (full.ndim - 2)
+    return jax.lax.dynamic_update_slice(full, one.astype(full.dtype), start)
+
+
+class BatchedEngine:
+    """Continuous-batching engine; see module docstring. ``run(requests)``
+    returns {uid: np.int32 tokens} plus fills ``self.stats``."""
+
+    def __init__(self, cfg: ModelConfig, bscfg: BatchedServeConfig, params):
+        self.arch: SupportedArchitecture = arch_for(cfg)
+        if self.arch.paged_kv and not cfg.fused_attention:
+            cfg = dataclasses.replace(cfg, fused_attention=True)
+        self.cfg, self.bscfg, self.params = cfg, bscfg, params
+        B, S = bscfg.slots, bscfg.max_seq
+        T = bscfg.page_tokens or self.arch.page_tokens
+        if S % T:
+            raise ValueError(f"max_seq {S} not a multiple of page_tokens {T}")
+        self.page_tokens = T
+        self.pool = None
+        if self.arch.paged_kv:
+            n_pages = bscfg.n_pages
+            if n_pages is None:
+                n_pages = B * (S // T) + (S // T)   # all slots + one transit
+            self.pool = PagedKVPool(cfg, T, n_pages,
+                                    kv_policy=bscfg.kv_policy)
+        self.caches = init_caches(cfg, B, S,
+                                  quantized_kv=self.arch.paged_kv,
+                                  kv_policy=bscfg.kv_policy,
+                                  packed_kv=True if self.arch.paged_kv
+                                  else None)
+        self.tok = jnp.zeros((B, 1), jnp.int32)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.req = jnp.zeros((B,), jnp.int32)
+        # host mirrors of the per-slot step inputs: admission/readmission
+        # mutate these (free numpy writes) and the round loop uploads them
+        # in ONE transfer per dirty round — three eager .at[].set() dispatches
+        # per admission were costing more than the pool copies themselves
+        self._tok_h = np.zeros((B,), np.int32)
+        self._pos_h = np.zeros((B,), np.int32)
+        self._req_h = np.zeros((B,), np.int32)
+        self._io_dirty = False
+        self.slots: list[_Slot | None] = [None] * B
+        step = self.arch.step_factory(cfg, temperature=bscfg.temperature,
+                                      seed=bscfg.seed, max_seq=S)
+        self._step = jax.jit(step, donate_argnums=(1,))
+        # one jitted prefill; jax's jit cache specializes it per shape bucket
+        self._prefill = jax.jit(self.arch.prefill_factory(cfg))
+        self._pf_caches: dict[int, Any] = {}   # bucket -> template caches
+        if bscfg.prefill_buckets is not None:
+            self.buckets = tuple(bscfg.prefill_buckets)
+        elif self.arch.prefill_buckets is not None:
+            self.buckets = tuple(self.arch.prefill_buckets)
+        else:
+            self.buckets = tuple(b for b in (2 * T, 4 * T, 8 * T, 16 * T)
+                                 if b <= S)
+        self.stats: dict[str, Any] = {}
+
+    # -- admission ---------------------------------------------------------
+    def _bucket_for(self, L: int) -> int:
+        for b in self.buckets:
+            if L <= b:
+                return b
+        # longer than every bucket: one-off page-multiple shape
+        return -(-L // self.page_tokens) * self.page_tokens
+
+    def _prefill_request(self, prompt: np.ndarray):
+        """Run batch-1 prefill; returns (first greedy token [1], pf_caches,
+        L)."""
+        L = int(prompt.shape[0])
+        T = self.page_tokens
+        if self.buckets and self.arch.prefill_buckets is None:
+            bucket = self._bucket_for(L)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :L] = prompt
+            S_pf = bucket
+        else:
+            # exact-length prefill (recurrent families): the cache still
+            # spans whole pages so the pool can copy page-granular
+            toks = np.asarray(prompt, np.int32)[None]
+            S_pf = -(-L // T) * T
+        if self.arch.recurrent_state:
+            # recurrent prefill CONSUMES the cache's initial state — always
+            # start from a fresh zero-state cache (never reuse a template a
+            # previous admission may alias)
+            caches = init_caches(self.cfg, 1, S_pf,
+                                 quantized_kv=self.arch.paged_kv,
+                                 kv_policy=self.bscfg.kv_policy,
+                                 packed_kv=True if self.arch.paged_kv
+                                 else None)
+        else:
+            caches = self._pf_caches.get(S_pf)
+            if caches is None:
+                caches = init_caches(self.cfg, 1, S_pf,
+                                     quantized_kv=self.arch.paged_kv,
+                                     kv_policy=self.bscfg.kv_policy,
+                                     packed_kv=True)
+                self._pf_caches[S_pf] = caches
+        logits, pf_caches = self._prefill(
+            self.params, jnp.asarray(toks), caches,
+            jnp.asarray([L - 1], jnp.int32))
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        return tok0, pf_caches, L
+
+    def _copy_recurrent(self, pf_caches, slot: int):
+        for i, spec in enumerate(self.cfg.pattern):
+            if spec.mixer == "attn":
+                continue
+            key = f"b{i}"
+            self.caches[key] = jax.tree.map(
+                lambda full, one: _leaf_set_slot(full, one, jnp.int32(slot)),
+                self.caches[key], pf_caches[key])
+
+    def _set_slot_io(self, slot: int, tok0: int, pos: int, uid: int):
+        self._tok_h[slot] = tok0
+        self._pos_h[slot] = pos
+        self._req_h[slot] = uid
+        self._io_dirty = True
+
+    def _admit(self, r: Request, slot: int, results: dict):
+        if len(r.tokens) + r.max_new > self.bscfg.max_seq:
+            raise ValueError(
+                f"request {r.uid}: prompt {len(r.tokens)} + max_new "
+                f"{r.max_new} exceeds max_seq {self.bscfg.max_seq}")
+        tok0, pf_caches, L = self._prefill_request(np.asarray(r.tokens))
+        if self.pool is not None:
+            table = self.pool.store_prefill(pf_caches, L)
+            self.caches = self.pool.load_into_slot(table, self.caches, slot)
+            self.pool.free(table.pages)
+        if self.arch.recurrent_state:
+            self._copy_recurrent(pf_caches, slot)
+        # first token: argmax of the prefill logits, same as the sequential
+        # engine — it is token 0 of the output
+        first = int(np.asarray(tok0)[0])
+        self._set_slot_io(slot, first, L, r.uid)
+        self.stats["prefills"] = self.stats.get("prefills", 0) + 1
+        if r.max_new == 1 or (self.bscfg.eos >= 0 and first == self.bscfg.eos):
+            results[r.uid] = np.asarray([first], np.int32)
+            return
+        self.slots[slot] = _Slot(uid=r.uid, prompt_len=L, max_new=r.max_new,
+                                 tokens=[first])
+
+    def _readmit(self, p: _Parked, slot: int):
+        if self.pool is not None:
+            table = p.table if p.table is not None \
+                else self.pool.restore_from_host(p.host)
+            self.caches = self.pool.load_into_slot(table, self.caches, slot)
+            self.pool.free(table.pages)
+        if p.state is not None:
+            for key, blob in p.state.items():
+                self.caches[key] = jax.tree.map(
+                    lambda full, one: _leaf_set_slot(
+                        full, jnp.asarray(one), jnp.int32(slot)),
+                    self.caches[key], blob)
+        self._set_slot_io(slot, int(p.last_tok), p.pos, p.uid)
+        self.slots[slot] = _Slot(uid=p.uid, prompt_len=p.prompt_len,
+                                 max_new=p.max_new, tokens=p.tokens)
+        self.stats["readmits"] = self.stats.get("readmits", 0) + 1
+
+    # -- preemption --------------------------------------------------------
+    def _park_slot(self, slot: int) -> _Parked:
+        st = self.slots[slot]
+        pos = st.prompt_len + len(st.tokens) - 1   # next write position
+        parked = _Parked(uid=st.uid, prompt_len=st.prompt_len,
+                         max_new=st.max_new, tokens=st.tokens, pos=pos,
+                         last_tok=st.tokens[-1])
+        if self.pool is not None:
+            parked.table = self.pool.store_from_slot(self.caches, slot, pos)
+            if self.bscfg.evict_parked_to_host:
+                parked.host = self.pool.evict_to_host(parked.table)
+                parked.table = None
+                self.stats["host_evictions"] = \
+                    self.stats.get("host_evictions", 0) + 1
+        if self.arch.recurrent_state:
+            parked.state = {}
+            for i, spec in enumerate(self.cfg.pattern):
+                if spec.mixer == "attn":
+                    continue
+                key = f"b{i}"
+                parked.state[key] = jax.tree.map(
+                    lambda leaf: np.asarray(leaf[:, slot:slot + 1]),
+                    self.caches[key])
+        self.slots[slot] = None
+        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        return parked
+
+    def preempt(self, uid: int) -> _Parked:
+        """Forcibly park the slot serving ``uid`` (test/chaos hook)."""
+        for s, st in enumerate(self.slots):
+            if st is not None and st.uid == uid:
+                return self._park_slot(s)
+        raise KeyError(f"request {uid} not active")
+
+    # -- the run loop ------------------------------------------------------
+    def _n_active(self) -> int:
+        return sum(st is not None for st in self.slots)
+
+    def _free_slots(self):
+        return [s for s, st in enumerate(self.slots) if st is None]
+
+    def _rounds(self) -> np.ndarray:
+        """``sync_every`` decode steps; one [slots, sync_every] host sync."""
+        if self._io_dirty:
+            # slot bookkeeping changed since the last round: upload the host
+            # mirrors in one shot (between rounds without admissions the
+            # device arrays are authoritative and already advanced)
+            self.tok = jnp.asarray(self._tok_h[:, None])
+            self.pos = jnp.asarray(self._pos_h)
+            self.req = jnp.asarray(self._req_h)
+            self._io_dirty = False
+        toks = []
+        for _ in range(self.bscfg.sync_every):
+            self.tok, self.caches, self.pos = self._step(
+                self.params, self.caches, self.tok, self.pos, self.req)
+            toks.append(self.tok)
+        chunk = np.asarray(jnp.concatenate(toks, axis=1))
+        # keep the mirrors in lockstep: last emitted token is the next step
+        # input; position advances one per step, clamped exactly like the
+        # device-side jnp.minimum(pos + 1, max_seq - 1)
+        self._tok_h[:] = chunk[:, -1]
+        np.minimum(self._pos_h + self.bscfg.sync_every,
+                   self.bscfg.max_seq - 1, out=self._pos_h)
+        return chunk
+
+    def _harvest(self, chunk: np.ndarray, results: dict):
+        for s, st in enumerate(self.slots):
+            if st is None:
+                continue
+            for k in range(chunk.shape[1]):
+                t = int(chunk[s, k])
+                st.tokens.append(t)
+                done = len(st.tokens) >= st.max_new or \
+                    (self.bscfg.eos >= 0 and t == self.bscfg.eos)
+                if done:
+                    results[st.uid] = np.asarray(st.tokens[:st.max_new],
+                                                 np.int32)
+                    self.slots[s] = None
+                    break
+
+    def run(self, requests: list[Request]) -> dict[int, np.ndarray]:
+        self.stats = {"steps": 0, "rounds": 0, "productive_slot_steps": 0,
+                      "emitted_tokens": 0}
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        parked: deque[_Parked] = deque()
+        results: dict[int, np.ndarray] = {}
+        step_no = 0
+        starve_rounds = 0
+        while pending or parked or self._n_active():
+            # admit: parked first (they hold evicted state), then arrivals
+            for s in self._free_slots():
+                if parked:
+                    self._readmit(parked.popleft(), s)
+                elif pending and pending[0].arrival <= step_no:
+                    self._admit(pending.popleft(), s, results)
+                else:
+                    break
+            if not self._n_active():
+                # idle: fast-forward the clock to the next arrival
+                if pending:
+                    step_no = max(step_no, pending[0].arrival)
+                    continue
+                break   # only parked left with no free slot: impossible
+            chunk = self._rounds()
+            n_act = self._n_active()
+            step_no += self.bscfg.sync_every
+            self.stats["steps"] = step_no
+            self.stats["rounds"] += 1
+            self.stats["productive_slot_steps"] += \
+                n_act * self.bscfg.sync_every
+            before = len(results)
+            self._harvest(chunk, results)
+            # starvation -> preempt the longest-tail slot and admit the head
+            waiting = (pending and pending[0].arrival <= step_no
+                       and not self._free_slots())
+            retired = len(results) > before
+            starve_rounds = starve_rounds + 1 if (waiting and not retired) \
+                else 0
+            if waiting and starve_rounds >= self.bscfg.preempt_patience:
+                victim = max(
+                    (s for s, st in enumerate(self.slots) if st is not None),
+                    key=lambda s: self.slots[s].prompt_len
+                    + len(self.slots[s].tokens))
+                parked.append(self._park_slot(victim))
+                self._admit(pending.popleft(), victim, results)
+                starve_rounds = 0
+        # flush any unfinished (shouldn't happen: harvest retires at max_new)
+        for st in self.slots:
+            if st is not None:
+                results[st.uid] = np.asarray(st.tokens[:st.max_new],
+                                             np.int32)
+        self.slots = [None] * self.bscfg.slots
+        total = sum(len(v) for v in results.values())
+        self.stats["emitted_tokens"] = total
+        denom = self.bscfg.slots * self.stats["rounds"] \
+            * self.bscfg.sync_every
+        self.stats["slot_occupancy"] = \
+            self.stats["productive_slot_steps"] / denom if denom else 0.0
+        if self.pool is not None:
+            self.stats["pool"] = self.pool.stats()
+        return results

@@ -41,6 +41,12 @@ class ServeConfig:
     # donate the cache buffers to the jitted prefill/decode steps so each
     # step updates the KV cache in place instead of allocating a fresh copy
     donate_caches: bool = True
+    # EOS mode: sync the device-side all-done flag to host only every K
+    # decode steps (the old per-token ``bool(done.all())`` paid one
+    # device->host round-trip per generated token). The loop may overrun a
+    # batch-wide EOS by up to K-1 junk tokens; callers already truncate at
+    # their row's EOS.
+    eos_sync_every: int = 8
 
 
 def _serve_model_cfg(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
@@ -61,17 +67,28 @@ def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig):
 
 
 def make_serve_step(cfg: ModelConfig, scfg: ServeConfig):
-    """serve_step(params, caches, token [B,1], pos) -> (next_token, caches)."""
+    """serve_step(params, caches, token [B,1], pos, req_ids=None)
+    -> (next_token, caches)."""
     cfg = _serve_model_cfg(cfg, scfg)
 
-    def serve_step(params, caches, token, pos):
+    def serve_step(params, caches, token, pos, req_ids=None):
         logits, caches = decode_step(params, token, pos, caches, cfg)
         if scfg.temperature > 0:
-            # seed threaded from ServeConfig: distinct engines/configs get
-            # distinct sample streams (the old hardcoded PRNGKey(0) made
-            # temperature sampling identical across every call)
-            key = jax.random.fold_in(jax.random.PRNGKey(scfg.seed), pos)
-            nxt = jax.random.categorical(key, logits / scfg.temperature, -1)
+            # per-request sample streams: a request's draws are a pure
+            # function of (engine seed, request id, position) — which other
+            # requests share the batch can never perturb them (the old
+            # single engine-level fold_in(seed, pos) key was shared across
+            # every row)
+            if req_ids is None:
+                req_ids = jnp.arange(token.shape[0], dtype=jnp.int32)
+            base = jax.random.PRNGKey(scfg.seed)
+            p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), req_ids.shape)
+
+            def sample(r, pp, lg):
+                key = jax.random.fold_in(jax.random.fold_in(base, r), pp)
+                return jax.random.categorical(key, lg / scfg.temperature, -1)
+
+            nxt = jax.vmap(sample)(req_ids, p, logits)
         else:
             nxt = jnp.argmax(logits, axis=-1)
         return nxt[:, None].astype(jnp.int32), caches
@@ -95,14 +112,31 @@ class Engine:
         don = dict(donate_argnums=(1,)) if scfg.donate_caches else {}
         self._step = jax.jit(make_serve_step(cfg, scfg), **don)
 
-    def generate(self, prompts: np.ndarray, max_new: int, eos: int = -1):
+    def generate(self, prompts: np.ndarray, max_new: int, eos: int = -1,
+                 request_ids=None):
         """Decode loop with a device-side token buffer: tokens stay on
-        device across steps and sync to host ONCE at the end. Only EOS
-        tracking (eos >= 0) pays a per-step host sync, and then only for a
-        scalar all-done flag, never the token history."""
+        device across steps and sync to host ONCE at the end. EOS tracking
+        (eos >= 0) accumulates the all-done flag ON DEVICE and syncs the
+        scalar only every ``scfg.eos_sync_every`` steps (never the token
+        history), so EOS mode no longer pays one round-trip per token.
+
+        Partial batches (B < scfg.batch) are padded to the compiled batch
+        shape and sliced off the output — no recompile, no hard assert.
+        ``request_ids`` [B] feeds the per-request temperature sample streams
+        (defaults to row index)."""
         B, S = prompts.shape
-        assert B == self.scfg.batch
-        caches = init_caches(self.cfg, B, self.scfg.max_seq,
+        Bc = self.scfg.batch
+        if B > Bc:
+            raise ValueError(f"batch {B} exceeds configured {Bc}")
+        if B < Bc:
+            prompts = np.concatenate(
+                [prompts, np.zeros((Bc - B, S), prompts.dtype)], axis=0)
+        rids = np.arange(B) if request_ids is None else np.asarray(request_ids)
+        if rids.shape != (B,):
+            raise ValueError(f"request_ids must be [{B}], got {rids.shape}")
+        rids = np.concatenate([rids, np.zeros(Bc - B, rids.dtype)])
+        rids = jnp.asarray(rids, jnp.int32)
+        caches = init_caches(self.cfg, Bc, self.scfg.max_seq,
                              quantized_kv=self.scfg.quantized_kv,
                              kv_policy=self.scfg.kv_policy,
                              packed_kv=self.scfg.packed_kv)
@@ -110,16 +144,19 @@ class Engine:
         logits, caches = self._prefill(self.params, batch, caches)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out = [tok]
-        done = (tok[:, 0] == eos) if eos >= 0 else None
+        sync_k = max(1, self.scfg.eos_sync_every)
+        # padded rows start done, so the batch-wide flag tracks real rows
+        done = ((tok[:, 0] == eos) | (jnp.arange(Bc) >= B)) if eos >= 0 \
+            else None
         for i in range(max_new - 1):
             tok, caches = self._step(self.params, caches, tok,
-                                     jnp.int32(S + i))
+                                     jnp.int32(S + i), rids)
             out.append(tok)
             if eos >= 0:
-                done = done | (tok[:, 0] == eos)
-                if bool(done.all()):  # scalar sync, EOS mode only
+                done = done | (tok[:, 0] == eos)   # stays on device
+                if (i + 1) % sync_k == 0 and bool(done.all()):
                     break
-        return np.asarray(jnp.concatenate(out, axis=1))
+        return np.asarray(jnp.concatenate(out, axis=1))[:B]
 
 
 class SketchIngestEngine:

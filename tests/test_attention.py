@@ -211,3 +211,23 @@ def test_tile_table_round_trip():
         assert FA.attention_tile("xla", 5) == 64
     finally:
         FA._TILE_TABLE.pop(("xla", 5), None)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_per_batch_kv_len_matches_per_row_scalar(backend):
+    """Vector kv_len/q_offset ([B] lens rows, the continuous-batching
+    engine's ragged decode) must be bitwise-identical to slicing each batch
+    row out and calling with its scalar length."""
+    fmt = FORMATS[1]
+    q, k, v = _qkv(4, B=3, S=24)
+    kq, vq = _cache(k, fmt), _cache(v, fmt)
+    kv_len = np.asarray([5, 24, 17], np.int32)
+    q_off = kv_len - 1
+    got = FA.attention_packed(q, kq, vq, kv_len=kv_len, causal=True,
+                              q_offset=q_off, backend=backend, tile=8)
+    for b in range(3):
+        one = FA.attention_packed(
+            q[b:b + 1], _cache(k[b:b + 1], fmt), _cache(v[b:b + 1], fmt),
+            kv_len=int(kv_len[b]), causal=True, q_offset=int(q_off[b]),
+            backend=backend, tile=8)
+        np.testing.assert_array_equal(np.asarray(got[b]), np.asarray(one[0]))
