@@ -480,6 +480,11 @@ def bench_serve_batch(quick=False, warmup=1, reps=3):
             for _ in range(max(reps, 1))]
     btps = float(np.median([b[0] for b, _ in runs]))
     stps = float(np.median([s[0] for _, s in runs]))
+    # engine-side numbers come from the obs registry snapshot (DESIGN.md
+    # §13) — the same export CI archives — instead of re-deriving them here
+    from repro import obs
+
+    snap = obs.export()["registries"]["serve.batched"]
     pool = beng.stats["pool"]
     speedup = btps / stps
     ratio = pool["pool_bytes_packed"] / pool["pool_bytes_logical_f32"]
@@ -493,7 +498,10 @@ def bench_serve_batch(quick=False, warmup=1, reps=3):
         "sequential_tokens_per_s": stps,
         "speedup": speedup,
         "bitwise_match": bool(match),
-        "slot_occupancy": beng.stats["slot_occupancy"],
+        "slot_occupancy": snap["gauges"]["slot_occupancy"],
+        "emitted_tokens": snap["counters"]["emitted_tokens"]["exact"],
+        "ttft_ms_p50": snap["histograms"]["ttft_ms"]["p50"],
+        "tbt_ms_p50": snap["histograms"]["tbt_ms"]["p50"],
         "pool_peak_occupancy": pool["peak_used"] / pool["n_pages"],
         "page_bytes_packed": pool["page_bytes_packed"],
         "pool_bytes_packed": pool["pool_bytes_packed"],
@@ -562,9 +570,14 @@ def bench_fl(quick=False, warmup=1, reps=3):
         hist = run_fed_avg(fcfg, task)
         tail = sorted(hist["round_seconds"][skip:])
         round_us = tail[len(tail) // 2] * 1e6
-        wire = hist["wire_bytes_per_round"][-1]
+        # wire bytes + final loss come off the driver's obs registry (the
+        # export CI archives), not re-derived from hist
+        from repro import obs
+
+        snap = obs.export()["registries"]["fl.fedavg"]
+        wire = int(snap["gauges"]["wire_bytes_last_round"])
         out[name] = {"round_us": round_us, "wire_bytes": wire,
-                     "final_loss": hist["eval_loss"][-1]}
+                     "final_loss": snap["gauges"]["eval_loss_last"]}
     red = out["f32"]["wire_bytes"] / out["f2p8"]["wire_bytes"]
     out["wire_reduction"] = red
     print(f"fl_round_f2p8,{out['f2p8']['round_us']:.0f},"
@@ -600,11 +613,14 @@ def bench_fl_fleet(quick=False, warmup=1, reps=3):
     skip = 1 + max(warmup, 0)          # first round pays compile
     tail = sorted(hist["round_seconds"][skip:])
     round_us = tail[len(tail) // 2] * 1e6
-    wire = hist["wire_bytes_per_round"][-1]
+    from repro import obs
+
+    snap = obs.export()["registries"]["fl.fleet"]
+    wire = int(snap["gauges"]["wire_bytes_last_round"])
     out = {"n_clients": n, "fleet_round_us": round_us,
            "wire_bytes_per_round": wire,
            "bytes_per_client": wire / n,
-           "final_loss": hist["eval_loss"][-1]}
+           "final_loss": snap["gauges"]["eval_loss_last"]}
     print(f"fl_fleet_round_{n}c,{round_us:.0f},wire_mb={wire/1e6:.2f}")
 
     # faulted wall time: straggler/chaos dominated, trajectory-only
@@ -612,13 +628,121 @@ def bench_fl_fleet(quick=False, warmup=1, reps=3):
                                 quorum=16)
     fh = run_fleet_rounds(chaos, task, faults=named_plan("chaos-small"))
     faulted_us = fh["round_seconds"][-1] * 1e6
+    snap = obs.export()["registries"]["fl.fleet"]   # now the chaos run's
     out["fleet_faulted"] = {
         "round_wall_us": faulted_us,
-        "sim_time_s": fh["sim_time"][-1],
+        "sim_time_s": snap["gauges"]["sim_time_last"],
         "admitted": fh["admitted"][-1], "dropped": fh["dropped"][-1],
-        "quarantined": fh["quarantined"][-1]}
+        "quarantined": snap["counters"]["quarantined"]["exact"],
+        "arrival_lag_s_p90": snap["histograms"]["arrival_lag_s"]["p90"]}
     print(f"fleet_faulted_round_wall,{faulted_us:.0f},"
           f"admitted={fh['admitted'][-1]}/{chaos.sample}")
+    return out
+
+
+def bench_obs_overhead(quick=False, warmup=1, reps=3):
+    """Observability cost (DESIGN.md §13, the ISSUE-9 acceptance): the same
+    continuous-batching workload with tracing fully armed vs disarmed,
+    interleaved so host drift hits both sides equally. ``overhead_ratio``
+    (enabled/disabled wall) is the gated headline — ratios of same-process
+    runs are stable where raw engine tok/s is host-jitter dominated (which
+    is why the tok_s values carry no gated suffix). Primitive costs
+    (span/counter/observe/export) are gated ``_us`` microbenchmarks.
+    Outputs must stay bitwise-identical traced vs untraced."""
+    import jax
+
+    from repro import obs
+    from repro.configs import smoke_config
+    from repro.models import init_params
+    from repro.serve import BatchedEngine, BatchedServeConfig, Request
+
+    out = {}
+
+    # 1) primitive microcosts (amortized over K calls — these are ns-scale)
+    reg = obs.MetricsRegistry("bench.obs", register=False)
+    c = reg.counter("c")
+    h = reg.histogram("h", 1e-3, 1e3)
+    K = 10_000
+
+    def inc_loop():
+        for _ in range(K):
+            c.inc()
+
+    def observe_loop():
+        for _ in range(K):
+            h.observe(0.5)
+
+    us, _ = timeit(inc_loop, warmup=1, reps=reps)
+    out["counter_inc_us"] = us / K
+    us, _ = timeit(observe_loop, warmup=1, reps=reps)
+    out["hist_observe_us"] = us / K
+    Ks = 1000
+    obs.enable(trace=True)
+
+    def span_loop():
+        for _ in range(Ks):
+            with obs.span("s"):
+                pass
+
+    us, _ = timeit(span_loop, warmup=1, reps=reps)
+    out["span_us"] = us / Ks
+    obs.disable()
+    us, _ = timeit(span_loop, warmup=1, reps=reps)
+    out["span_disabled_us"] = us / Ks
+    us, _ = timeit(reg.export, warmup=1, reps=reps)
+    out["export_us"] = us
+    print(f"obs_span,{out['span_us']:.3f},"
+          f"disabled={out['span_disabled_us']:.4f}")
+    print(f"obs_counter_inc,{out['counter_inc_us']:.3f},"
+          f"hist_observe={out['hist_observe_us']:.3f}")
+
+    # 2) engine overhead: enabled vs disabled, interleaved
+    cfg = smoke_config("llama3_2_3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    slots, N, max_seq = (4, 8, 128) if quick else (8, 16, 128)
+    rng = np.random.default_rng(11)
+    reqs = [Request(uid=u + 1,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 33))
+                                        ).astype(np.int32),
+                    max_new=int(rng.integers(32, 65)), arrival=u // 4)
+            for u in range(N)]
+    beng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
+                                                 max_seq=max_seq), params)
+    obs.disable()
+    for _ in range(max(warmup, 1)):       # compile outside the clock
+        base = beng.run(reqs)
+
+    def one(enabled):
+        if enabled:
+            obs.enable(trace=True)
+        else:
+            obs.disable()
+        t0 = time.perf_counter()
+        res = beng.run(reqs)
+        dt = time.perf_counter() - t0
+        obs.disable()
+        return res, dt
+
+    offs, ons = [], []
+    for _ in range(max(reps, 2)):
+        r_off, dt = one(False)
+        offs.append(dt)
+        r_on, dt = one(True)
+        ons.append(dt)
+        assert all(np.array_equal(r_off[q.uid], base[q.uid]) and
+                   np.array_equal(r_on[q.uid], base[q.uid]) for q in reqs), \
+            "obs must not perturb engine outputs"
+    tokens = sum(len(v) for v in base.values())
+    t_off = float(np.median(offs))
+    t_on = float(np.median(ons))
+    out["overhead_ratio"] = t_on / t_off
+    out["enabled_tok_s"] = tokens / t_on
+    out["disabled_tok_s"] = tokens / t_off
+    out["bitwise_match"] = True          # asserted above
+    print(f"obs_overhead_ratio,{out['overhead_ratio']*1000:.0f},"
+          f"on={out['enabled_tok_s']:.0f}_off={out['disabled_tok_s']:.0f}"
+          f"_tok_s")
     return out
 
 
@@ -720,6 +844,7 @@ BENCHES = {
     "fl": bench_fl,
     "fl_fleet": bench_fl_fleet,
     "autotune": bench_autotune,
+    "obs_overhead": bench_obs_overhead,
 }
 
 
@@ -746,6 +871,7 @@ def _append_trajectory(results: dict, args) -> None:
         "fl": results.get("fl"),
         "fl_fleet": results.get("fl_fleet"),
         "autotune": results.get("autotune"),
+        "obs_overhead": results.get("obs_overhead"),
         "table5_us": (results.get("table5") or {}).get("us"),
         "table6_us": {k: v["us"] for k, v in
                       (results.get("table6") or {}).items()},
@@ -785,14 +911,33 @@ def main() -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     print("name,us_per_call,derived")
     results = {}
+    # archive the obs snapshot next to results.json: every registry the
+    # benched subsystems populated (serve.batched, fl.*, sketch.ingest),
+    # with exact counts alongside the F2P estimates (DESIGN.md §13).
+    # Snapshotted after EVERY bench and merged: engine-owned registries are
+    # weakly registered and die with the engine when its bench returns.
+    obs_snap: dict = {}
+    try:
+        from repro import obs
+    except ImportError:
+        obs = None
     for name in names:
         results[name] = BENCHES[name](args.quick, warmup=args.warmup,
                                       reps=args.reps)
+        if obs is not None:
+            snap = obs.export()
+            obs_snap.update(snap.pop("registries"))
+            obs_snap_meta = snap
     with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
     print(f"# full tables -> {os.path.join(OUT_DIR, 'results.json')}")
+    if obs is not None:
+        with open(os.path.join(OUT_DIR, "obs_export.json"), "w") as f:
+            json.dump({"registries": obs_snap, **obs_snap_meta}, f, indent=1)
+        print(f"# obs export -> {os.path.join(OUT_DIR, 'obs_export.json')}")
     if {"host_encode", "kernels", "packed", "matmul", "attention", "serve",
-            "serve_batch", "sketch", "fl", "fl_fleet", "autotune"} & set(names):
+            "serve_batch", "sketch", "fl", "fl_fleet", "autotune",
+            "obs_overhead"} & set(names):
         _append_trajectory(results, args)
 
 

@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import counters as C
-from repro.telemetry import ExpertLoadTracker
+from repro.obs import ExpertLoadTracker
 
 
 def shootout():

@@ -1,5 +1,5 @@
 """Continuous-batching example: N staggered requests through the block-paged
-packed-F2P KV pool (DESIGN.md §12).
+packed-F2P KV pool (DESIGN.md §12), with optional observability capture.
 
 Serves a queue of mixed-length requests arriving at different times through
 :class:`repro.serve.BatchedEngine` — dynamic admission into fixed decode
@@ -8,8 +8,19 @@ one-at-a-time through the sequential :class:`repro.serve.Engine` and asserts
 the greedy outputs are BIT-FOR-BIT identical. Reports aggregate tokens/s for
 both, plus the pool's packed-vs-logical-f32 footprint.
 
-    PYTHONPATH=src python examples/serve_continuous.py
+``--trace PATH`` arms the obs span tracer (DESIGN.md §13) for the timed run
+and writes a Chrome/Perfetto trace_event JSON: open it at https://ui.perfetto.dev
+to see the engine row (round/prefill spans, admit/preempt/evict/readmit/
+retire markers, slot+pool counters) and one row per request with its
+``ttft`` and ``decode`` spans. The script then validates the trace — JSON
+loads, every request has its per-request spans, and the metrics registry
+agrees with the engine's stats view — and exits nonzero on any mismatch
+(the CI examples-smoke contract).
+
+    PYTHONPATH=src python examples/serve_continuous.py [--trace out.trace.json]
 """
+import argparse
+import json
 import os
 import sys
 import time
@@ -19,13 +30,55 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import smoke_config
 from repro.models import init_params
 from repro.serve import (BatchedEngine, BatchedServeConfig, Engine, Request,
                          ServeConfig)
 
 
+def _validate_trace(path: str, reqs, eng) -> None:
+    """The examples-smoke acceptance: the written trace must be loadable
+    Chrome trace_event JSON with per-request ttft/decode spans for EVERY
+    request, and the obs metrics must agree with the engine stats view."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events, "empty trace"
+    for ev in events:
+        assert {"name", "ph", "pid", "tid"} <= set(ev), f"malformed: {ev}"
+        if ev["ph"] in ("X", "i", "C"):
+            assert "ts" in ev, f"timed event without ts: {ev}"
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0, f"negative duration: {ev}"
+    by_req = {}
+    for ev in events:
+        if ev["ph"] == "X" and ev["name"] in ("ttft", "decode"):
+            by_req.setdefault(ev["args"]["uid"], set()).add(ev["name"])
+    for r in reqs:
+        assert by_req.get(r.uid) == {"ttft", "decode"}, \
+            f"request {r.uid}: missing per-request spans ({by_req.get(r.uid)})"
+    names = {ev["name"] for ev in events}
+    for want in ("round", "prefill", "admit", "retire"):
+        assert want in names, f"engine timeline missing {want!r} events"
+    # metrics <-> stats consistency: the registry's exact shadows ARE the
+    # engine.stats numbers, and the TTFT histogram saw every request
+    snap = obs.export()["registries"]["serve.batched"]
+    assert snap["counters"]["prefills"]["exact"] == eng.stats["prefills"]
+    assert snap["histograms"]["ttft_ms"]["count"] == eng.stats["prefills"]
+    assert snap["counters"]["emitted_tokens"]["exact"] == \
+        eng.stats["emitted_tokens"]
+    print(f"trace OK  : {len(events)} events, {len(by_req)} request rows "
+          f"-> {path}")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace_event JSON here "
+                         "(arms obs tracing for the timed run)")
+    args = ap.parse_args()
+
     cfg = smoke_config("llama3_2_3b")
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(42)
@@ -41,9 +94,14 @@ def main():
     eng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
                                                 max_seq=max_seq), params)
     eng.run(reqs)                            # warmup: compile outside clock
+    if args.trace:
+        obs.enable(trace=True)
     t0 = time.perf_counter()
     out = eng.run(reqs)
     dt_b = time.perf_counter() - t0
+    if args.trace:
+        obs.get().tracer.write_chrome(args.trace)
+        obs.disable()
     ntok = sum(len(v) for v in out.values())
 
     seq = Engine(cfg, ServeConfig(batch=1, max_seq=max_seq,
@@ -70,6 +128,13 @@ def main():
     print(f"KV pool   : {pool['pool_bytes_packed'] / 1e3:.1f} KB packed vs "
           f"{pool['pool_bytes_logical_f32'] / 1e3:.1f} KB logical f32 "
           f"({pool['peak_used']}/{pool['n_pages']} pages peak)")
+    snap = obs.export()["registries"]["serve.batched"]
+    print(f"latency   : ttft p50 {snap['histograms']['ttft_ms']['p50']:.1f} ms"
+          f", tbt p50 {snap['histograms']['tbt_ms']['p50']:.2f} ms "
+          f"(F2P-estimated histograms)")
+
+    if args.trace:
+        _validate_trace(args.trace, reqs, eng)
 
 
 if __name__ == "__main__":

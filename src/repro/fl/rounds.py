@@ -31,8 +31,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.fl import client as C
 from repro.fl import server as S
+
+# module-scoped registries (created lazily, reset per run) so obs.export()
+# still sees the last run's numbers after the driver returns — benchmarks
+# read them instead of re-deriving wire bytes from hist
+_REGS: dict[str, obs.MetricsRegistry] = {}
+
+
+def _registry(name: str, seed: int) -> obs.MetricsRegistry:
+    reg = _REGS.get(name)
+    if reg is None:
+        reg = obs.MetricsRegistry(name, seed=seed)
+        _REGS[name] = reg
+    reg.reset()
+    return reg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,17 +176,25 @@ def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
     autotuning = fcfg.autotune is not None and ccfg.compress
     calib: dict = {}
 
+    reg = _registry("fl.fedavg", fcfg.seed)
+    c_rounds = reg.counter("rounds")
+    c_wire = reg.counter("wire_bytes")
+    g_loss = reg.gauge("eval_loss_last")
+    g_wire = reg.gauge("wire_bytes_last_round")
+
     hist = {"eval_loss": [], "client_loss": [], "wire_bytes_per_round": [],
             "round_seconds": [], "policy": None, "resolve_rounds": []}
     for r in range(fcfg.rounds):
         t0 = time.perf_counter()
         updates, round_losses = [], []
-        for c in range(fcfg.n_clients):
-            upd, residuals[c], losses = client_fn(
-                params, residuals[c], _client_batches(dcfg, fcfg, r, c))
-            updates.append(upd)
-            round_losses.append(float(losses[-1]))
-        delta = agg_fn(tuple(updates))
+        with obs.span("fl.compute", round=r):
+            for c in range(fcfg.n_clients):
+                with obs.span("fl.client", round=r, client=c):
+                    upd, residuals[c], losses = client_fn(
+                        params, residuals[c], _client_batches(dcfg, fcfg, r, c))
+                updates.append(upd)
+                round_losses.append(float(losses[-1]))
+            delta = agg_fn(tuple(updates))
         if autotuning:
             from repro.autotune import calibrate as CAL
             from repro.autotune.policy import leaf_path_str
@@ -204,6 +227,16 @@ def run_fed_avg(fcfg: FedAvgConfig, task=None, *, verbose: bool = False):
         hist["client_loss"].append(float(np.mean(round_losses)))
         hist["wire_bytes_per_round"].append(
             sum(S.wire_bytes(u) for u in updates))
+        c_rounds.inc()
+        c_wire.inc(hist["wire_bytes_per_round"][-1])
+        g_loss.set(ev)
+        g_wire.set(hist["wire_bytes_per_round"][-1])
+        s_obs = obs.get()
+        if s_obs is not None and s_obs.tracer is not None:
+            tr = s_obs.tracer
+            dur_us = hist["round_seconds"][-1] * 1e6
+            tr.complete("fl.round", tr.now_us() - dur_us, dur_us, round=r,
+                        eval_loss=ev)
         if verbose:
             print(f"round {r}: eval_loss {ev:.4f} "
                   f"client_loss {hist['client_loss'][-1]:.4f} "
@@ -317,6 +350,20 @@ def run_fleet_rounds(flcfg: FleetConfig, task=None, *, faults=None,
         "failed", "quarantined", "dup_skipped", "expired", "retries",
         "wire_bytes_per_round", "sim_time", "round_seconds")}
 
+    reg = _registry("fl.fleet", flcfg.seed)
+    c_st = {k: reg.counter(k) for k in (
+        "dropped", "failed", "retries", "admitted", "late_folded",
+        "quarantined", "dup_skipped", "expired")}
+    c_rounds = reg.counter("rounds")
+    c_committed = reg.counter("committed_rounds")
+    c_wire = reg.counter("wire_bytes")
+    g_loss = reg.gauge("eval_loss_last")
+    g_sim = reg.gauge("sim_time_last")
+    g_wire = reg.gauge("wire_bytes_last_round")
+    # straggler arrival lag: how far past the nominal compute time each
+    # delivered update lands (delay + retry backoff, virtual seconds)
+    h_lag = reg.histogram("arrival_lag_s", 1e-3, 1e3)
+
     for r in range(flcfg.rounds):
         t0 = time.perf_counter()
         srng = np.random.default_rng(
@@ -364,6 +411,7 @@ def run_fleet_rounds(flcfg: FleetConfig, task=None, *, faults=None,
             t_arr = flcfg.compute_time + f.delay + sum(
                 flcfg.backoff * 2.0 ** k
                 for k in range(f.transient_failures))
+            h_lag.observe(t_arr - flcfg.compute_time)
             u = updates[cid]
             if f.corrupt is not None:
                 u = corrupt_update(u, f.corrupt, plan.rng("corrupt", r, cid))
@@ -430,6 +478,23 @@ def run_fleet_rounds(flcfg: FleetConfig, task=None, *, faults=None,
         hist["wire_bytes_per_round"].append(int(wire))
         hist["sim_time"].append(float(sim))
         hist["round_seconds"].append(time.perf_counter() - t0)
+        for key, n in st.items():
+            if n:
+                c_st[key].inc(n)
+        c_rounds.inc()
+        if committed:
+            c_committed.inc()
+        c_wire.inc(wire)
+        g_loss.set(ev)
+        g_sim.set(float(sim))
+        g_wire.set(wire)
+        s_obs = obs.get()
+        if s_obs is not None and s_obs.tracer is not None:
+            tr = s_obs.tracer
+            dur_us = hist["round_seconds"][-1] * 1e6
+            tr.complete("fl.round", tr.now_us() - dur_us, dur_us, round=r,
+                        committed=committed, admitted=st["admitted"],
+                        eval_loss=ev)
         if verbose:
             print(f"round {r}: eval_loss {ev:.4f} committed={committed} "
                   f"admitted {st['admitted']} (late {st['late_folded']}) "

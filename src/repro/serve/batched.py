@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Any
 
@@ -41,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import init_caches
 from repro.models.config import ModelConfig
 from repro.serve.arch import SupportedArchitecture, arch_for
@@ -154,7 +156,56 @@ class BatchedEngine:
         else:
             self.buckets = tuple(b for b in (2 * T, 4 * T, 8 * T, 16 * T)
                                  if b <= S)
-        self.stats: dict[str, Any] = {}
+        # obs plane (DESIGN.md §13): the metrics registry is engine-owned
+        # and always on — counters buffer O(1) host floats, latency
+        # histograms bucket host-side, and the F2P fold runs only at
+        # sync/export. Tracing is the global opt-in (obs.enable()); every
+        # trace site below costs one `is None` probe when disarmed. The old
+        # ad-hoc ``self.stats`` dict is now a derived view (property below).
+        self.metrics = obs.MetricsRegistry("serve.batched",
+                                           seed=bscfg.seed)
+        m = self.metrics
+        self._c_prefills = m.counter("prefills")
+        self._c_readmits = m.counter("readmits")
+        self._c_preempt = m.counter("preemptions")
+        self._c_evict = m.counter("host_evictions")
+        self._c_rounds = m.counter("rounds")
+        self._c_prod = m.counter("productive_slot_steps")
+        self._c_emitted = m.counter("emitted_tokens")
+        self._g_steps = m.gauge("steps")
+        self._g_occ = m.gauge("slot_occupancy")
+        self._g_active = m.gauge("slots_active")
+        self._h_ttft = m.histogram("ttft_ms", 1e-2, 1e6)
+        self._h_tbt = m.histogram("tbt_ms", 1e-3, 1e5)
+        self._h_queue = m.histogram("queue_wait_ms", 1e-3, 1e6)
+        # per-request wall-clock samples (perf_counter_ns) keyed by uid:
+        # visible (first admissible), first_tok; folded into the histograms
+        # and per-request trace rows at retirement
+        self._rt: dict[int, dict[str, int]] = {}
+
+    # -- stats compatibility view -------------------------------------------
+    @property
+    def stats(self) -> dict[str, Any]:
+        """The pre-obs ad-hoc stats dict, derived from the registry's exact
+        shadows. Event keys (prefills/readmits/preemptions/host_evictions)
+        appear only once nonzero, matching the old lazy ``.get(k, 0) + 1``
+        writes; counts are exact ints, never F2P estimates."""
+        d: dict[str, Any] = {
+            "steps": int(self._g_steps.value),
+            "rounds": self._c_rounds.exact,
+            "productive_slot_steps": self._c_prod.exact,
+            "emitted_tokens": self._c_emitted.exact,
+            "slot_occupancy": self._g_occ.value,
+        }
+        for key, c in (("prefills", self._c_prefills),
+                       ("readmits", self._c_readmits),
+                       ("preemptions", self._c_preempt),
+                       ("host_evictions", self._c_evict)):
+            if c.exact:
+                d[key] = c.exact
+        if self.pool is not None:
+            d["pool"] = self.pool.stats()
+        return d
 
     # -- admission ---------------------------------------------------------
     def _bucket_for(self, L: int) -> int:
@@ -222,23 +273,58 @@ class BatchedEngine:
             raise ValueError(
                 f"request {r.uid}: prompt {len(r.tokens)} + max_new "
                 f"{r.max_new} exceeds max_seq {self.bscfg.max_seq}")
-        tok0, pf_caches, L = self._prefill_request(np.asarray(r.tokens))
-        if self.pool is not None:
-            table = self.pool.store_prefill(pf_caches, L)
-            self.caches = self.pool.load_into_slot(table, self.caches, slot)
-            self.pool.free(table.pages)
-        if self.arch.recurrent_state:
-            self._copy_recurrent(pf_caches, slot)
-        # first token: argmax of the prefill logits, same as the sequential
-        # engine — it is token 0 of the output
-        first = int(np.asarray(tok0)[0])
+        t0 = time.perf_counter_ns()
+        rt = self._rt.setdefault(r.uid, {"visible": t0})
+        self._h_queue.observe((t0 - rt["visible"]) / 1e6)
+        obs.instant("admit", uid=r.uid, slot=slot)
+        with obs.span("prefill", uid=r.uid, L=len(r.tokens)):
+            tok0, pf_caches, L = self._prefill_request(np.asarray(r.tokens))
+            if self.pool is not None:
+                table = self.pool.store_prefill(pf_caches, L)
+                self.caches = self.pool.load_into_slot(table, self.caches,
+                                                       slot)
+                self.pool.free(table.pages)
+            if self.arch.recurrent_state:
+                self._copy_recurrent(pf_caches, slot)
+            # first token: argmax of the prefill logits, same as the
+            # sequential engine — it is token 0 of the output
+            first = int(np.asarray(tok0)[0])
+        t1 = time.perf_counter_ns()
+        rt["first_tok"] = t1
+        self._h_ttft.observe((t1 - rt["visible"]) / 1e6)
         self._set_slot_io(slot, first, L, r.uid)
-        self.stats["prefills"] = self.stats.get("prefills", 0) + 1
+        self._c_prefills.inc()
         if r.max_new == 1 or (self.bscfg.eos >= 0 and first == self.bscfg.eos):
             results[r.uid] = np.asarray([first], np.int32)
+            self._retire(r.uid, 1)
             return
         self.slots[slot] = _Slot(uid=r.uid, prompt_len=L, max_new=r.max_new,
                                  tokens=[first])
+
+    def _retire(self, uid: int, n_tokens: int):
+        """Fold a finished request's timing into the histograms and (when
+        tracing is armed) emit its per-request trace row: a ``ttft`` span
+        from first visibility to the prefill token and a ``decode`` span
+        from first token to retirement carrying the mean TBT."""
+        rt = self._rt.pop(uid, None)
+        if rt is None:
+            return
+        now = time.perf_counter_ns()
+        ft = rt.get("first_tok", now)
+        tbt_ms = ((now - ft) / 1e6) / (n_tokens - 1) if n_tokens > 1 else 0.0
+        if n_tokens > 1:
+            self._h_tbt.observe(tbt_ms)
+        s = obs.get()
+        if s is None or s.tracer is None:
+            return
+        tr = s.tracer
+        tid = uid + 1                       # row per request; engine row = 0
+        tr.thread_name(tid, f"req {uid}")
+        tr.complete("ttft", tr.ts_of(rt["visible"]),
+                    (ft - rt["visible"]) / 1e3, tid=tid, uid=uid)
+        tr.complete("decode", tr.ts_of(ft), (now - ft) / 1e3, tid=tid,
+                    uid=uid, tokens=n_tokens, tbt_ms=round(tbt_ms, 4))
+        tr.instant("retire", uid=uid)
 
     def _readmit(self, p: _Parked, slot: int):
         if self.pool is not None:
@@ -255,7 +341,8 @@ class BatchedEngine:
         self._set_slot_io(slot, int(p.last_tok), p.pos, p.uid)
         self.slots[slot] = _Slot(uid=p.uid, prompt_len=p.prompt_len,
                                  max_new=p.max_new, tokens=p.tokens)
-        self.stats["readmits"] = self.stats.get("readmits", 0) + 1
+        self._c_readmits.inc()
+        obs.instant("readmit", uid=p.uid, slot=slot, pos=p.pos)
 
     # -- preemption --------------------------------------------------------
     def _park_slot(self, slot: int) -> _Parked:
@@ -269,8 +356,8 @@ class BatchedEngine:
             if self.bscfg.evict_parked_to_host:
                 parked.host = self.pool.evict_to_host(parked.table)
                 parked.table = None
-                self.stats["host_evictions"] = \
-                    self.stats.get("host_evictions", 0) + 1
+                self._c_evict.inc()
+                obs.instant("evict", uid=st.uid, slot=slot)
         if self.arch.recurrent_state:
             parked.state = {}
             for i, spec in enumerate(self.cfg.pattern):
@@ -281,7 +368,8 @@ class BatchedEngine:
                     lambda leaf: np.asarray(leaf[:, slot:slot + 1]),
                     self.caches[key])
         self.slots[slot] = None
-        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        self._c_preempt.inc()
+        obs.instant("preempt", uid=st.uid, slot=slot, pos=pos)
         return parked
 
     def preempt(self, uid: int) -> _Parked:
@@ -335,17 +423,28 @@ class BatchedEngine:
                     results[st.uid] = np.asarray(st.tokens[:st.max_new],
                                                  np.int32)
                     self.slots[s] = None
+                    self._retire(st.uid, len(results[st.uid]))
                     break
 
     def run(self, requests: list[Request]) -> dict[int, np.ndarray]:
-        self.stats = {"steps": 0, "rounds": 0, "productive_slot_steps": 0,
-                      "emitted_tokens": 0}
+        self.metrics.reset()
+        self._rt = {}
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         parked: deque[_Parked] = deque()
         results: dict[int, np.ndarray] = {}
         step_no = 0
         starve_rounds = 0
+        tracing = obs.get() is not None and obs.get().tracer is not None
+        if tracing:
+            obs.get().tracer.thread_name(0, "engine")
         while pending or parked or self._n_active():
+            # stamp first-visibility time on newly admissible requests (the
+            # queue-wait/TTFT clock starts when a request COULD be admitted)
+            now = time.perf_counter_ns()
+            for r in pending:
+                if r.arrival > step_no:
+                    break
+                self._rt.setdefault(r.uid, {"visible": now})
             # admit: parked first (they hold evicted state), then arrivals
             for s in self._free_slots():
                 if parked:
@@ -360,13 +459,19 @@ class BatchedEngine:
                     step_no = max(step_no, pending[0].arrival)
                     continue
                 break   # only parked left with no free slot: impossible
-            chunk = self._rounds()
+            with obs.span("round", step=step_no):
+                chunk = self._rounds()
             n_act = self._n_active()
             step_no += self.bscfg.sync_every
-            self.stats["steps"] = step_no
-            self.stats["rounds"] += 1
-            self.stats["productive_slot_steps"] += \
-                n_act * self.bscfg.sync_every
+            self._g_steps.set(step_no)
+            self._g_active.set(n_act)
+            self._c_rounds.inc()
+            self._c_prod.inc(n_act * self.bscfg.sync_every)
+            if tracing:
+                series = {"active": n_act}
+                if self.pool is not None:
+                    series["pool_used"] = self.pool.stats()["used"]
+                obs.counter_event("slots", **series)
             before = len(results)
             self._harvest(chunk, results)
             # starvation -> preempt the longest-tail slot and admit the head
@@ -388,13 +493,11 @@ class BatchedEngine:
             if st is not None:
                 results[st.uid] = np.asarray(st.tokens[:st.max_new],
                                              np.int32)
+                self._retire(st.uid, len(results[st.uid]))
         self.slots = [None] * self.bscfg.slots
         total = sum(len(v) for v in results.values())
-        self.stats["emitted_tokens"] = total
-        denom = self.bscfg.slots * self.stats["rounds"] \
+        self._c_emitted.inc(total)
+        denom = self.bscfg.slots * self._c_rounds.exact \
             * self.bscfg.sync_every
-        self.stats["slot_occupancy"] = \
-            self.stats["productive_slot_steps"] / denom if denom else 0.0
-        if self.pool is not None:
-            self.stats["pool"] = self.pool.stats()
+        self._g_occ.set(self._c_prod.exact / denom if denom else 0.0)
         return results

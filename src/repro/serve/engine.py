@@ -172,18 +172,39 @@ class SketchIngestEngine:
     """
 
     def __init__(self, sketch, batch: int = 1 << 16, track_top: int = 256):
+        from repro import obs
         from repro.telemetry import HeavyHitterTable
 
         self.sketch = sketch
         self.batch = int(batch)
         self._buf = np.empty(self.batch, dtype=np.int64)
         self._fill = 0
-        self.packets = 0
-        self.batches = 0
         self.hh = HeavyHitterTable(capacity=track_top)
+        # obs registry (DESIGN.md §13): packet/batch tallies live in F2P
+        # cells with exact shadows; ``packets``/``batches`` stay exact-int
+        # reads. ``arrivals_per_s`` is derived from accumulated ingest wall
+        # time; ``flush_depth`` histograms the partial-tail size per flush.
+        self.metrics = obs.MetricsRegistry("sketch.ingest")
+        self._c_packets = self.metrics.counter("packets")
+        self._c_batches = self.metrics.counter("batches")
+        self._g_rate = self.metrics.gauge("arrivals_per_s")
+        self._h_flush = self.metrics.histogram("flush_depth", 1.0,
+                                               float(max(2, self.batch)))
+        self._ingest_s = 0.0
+
+    @property
+    def packets(self) -> int:
+        return self._c_packets.exact
+
+    @property
+    def batches(self) -> int:
+        return self._c_batches.exact
 
     def ingest(self, keys: np.ndarray) -> None:
         """Buffer packet keys; every full device batch is flushed eagerly."""
+        import time as _time
+
+        t0 = _time.perf_counter()
         keys = np.asarray(keys).ravel()
         pos = 0
         while pos < keys.size:
@@ -194,11 +215,22 @@ class SketchIngestEngine:
             if self._fill == self.batch:
                 self._fill = 0
                 self._dispatch(self._buf, np.ones(self.batch, np.float32))
+        self._ingest_s += _time.perf_counter() - t0
+        if self._ingest_s > 0:
+            self._g_rate.set(self.packets / self._ingest_s)
 
     def flush(self) -> None:
         """Push the partial tail batch (zero-count padded to full shape) and
         drain budget the fixed-sweep (Pallas) backends carried between
         batches — estimates read after a flush must reflect every packet."""
+        from repro import obs
+
+        if self._fill:
+            self._h_flush.observe(float(self._fill))
+        with obs.span("sketch.flush", buffered=self._fill):
+            self._flush_inner()
+
+    def _flush_inner(self) -> None:
         if self._fill:
             keys = np.zeros(self.batch, dtype=np.int64)
             counts = np.zeros(self.batch, dtype=np.float32)
@@ -227,8 +259,8 @@ class SketchIngestEngine:
         if uniq.size == 0:
             return
         self.sketch.update(uniq, cnt.astype(np.float32))
-        self.packets += int(cnt.sum())
-        self.batches += 1
+        self._c_packets.inc(int(cnt.sum()))
+        self._c_batches.inc()
         # candidate refresh: the batch's most frequent keys, re-estimated
         # against the updated sketch (sketch+heap heavy-hitter recovery).
         # Queries go out zero-padded to a fixed shape — jit compiles the

@@ -1,56 +1,19 @@
-"""Telemetry: F2P-LI counter arrays for runtime flow statistics — the
+"""Telemetry: F2P-LI counter trackers for runtime flow statistics — the
 paper's approximate-counter use case (Sec. III-A) embedded in the framework.
 
-8-bit F2P_LI^2 registers track counts up to ~130k and 16-bit up to ~33.5M
-with the lowest on-arrival MSE of any 8/16-bit scheme (paper Table V), so
-per-expert token loads, per-host example counts, and per-route bytes are
-tracked at 1/4 the register width of exact u32/u64 counters.
+.. deprecated::
+    The hand-rolled ``FlowStats`` / ``ExpertLoadTracker`` counter trackers
+    moved to :mod:`repro.obs` (DESIGN.md §13), rebuilt on the shared
+    F2P-backed :class:`repro.obs.MetricsRegistry` so there is one
+    grid-counter metrics implementation in the tree. They are re-exported
+    here unchanged for compatibility — import from ``repro.obs`` in new
+    code. ``HeavyHitterTable`` / ``HeavyHittersReport`` (sketch-side
+    heavy-hitter recovery, not metrics) still live here.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.counters import CounterArray, f2p_li_grid
+from repro.obs.compat import ExpertLoadTracker, FlowStats
 from repro.telemetry.heavy_hitters import HeavyHittersReport, HeavyHitterTable
 
 __all__ = ["ExpertLoadTracker", "FlowStats", "HeavyHitterTable",
            "HeavyHittersReport"]
-
-
-class ExpertLoadTracker:
-    """Per-expert token-load counters for MoE routing (fed from the `load`
-    aux output of moe_apply)."""
-
-    def __init__(self, n_experts: int, n_bits: int = 16, seed: int = 0):
-        self.counters = CounterArray(n_experts, f2p_li_grid(n_bits), seed=seed)
-        self.n_experts = n_experts
-
-    def update(self, load: np.ndarray):
-        load = np.asarray(load, dtype=np.int64)
-        idx = np.nonzero(load > 0)[0]
-        self.counters.add(idx, load[idx])
-
-    def loads(self) -> np.ndarray:
-        return self.counters.estimates()
-
-    def imbalance(self) -> float:
-        est = self.loads()
-        mean = est.mean() if est.size else 0.0
-        return float(est.max() / mean) if mean > 0 else 0.0
-
-
-class FlowStats:
-    """Named flow counters (tokens in, tokens padded, examples dropped...)."""
-
-    def __init__(self, names, n_bits: int = 16, seed: int = 1):
-        self.names = list(names)
-        self.counters = CounterArray(len(self.names), f2p_li_grid(n_bits),
-                                     seed=seed)
-
-    def add(self, name: str, amount: int = 1):
-        i = self.names.index(name)
-        self.counters.add(np.array([i]), np.array([amount]))
-
-    def snapshot(self) -> dict:
-        est = self.counters.estimates()
-        return dict(zip(self.names, est.tolist()))

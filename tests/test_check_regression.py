@@ -35,6 +35,22 @@ def test_flatten_picks_only_timing_suffixes():
     assert "table6_us.8" not in flat
 
 
+def test_ratio_suffix_gated_low():
+    """``_ratio`` leaves gate worse-when-higher (obs_overhead.overhead_ratio
+    and the deterministic nbytes/mse ratios); ungated prefixes still win."""
+    flat = flatten_metrics({
+        "obs_overhead": {"overhead_ratio": 1.05, "bitwise_match": True},
+        "serve_batch": {"packed_ratio": 0.76},
+    })
+    assert flat["obs_overhead.overhead_ratio"] == (1.05, "low")
+    assert "serve_batch.packed_ratio" not in flat     # ungated prefix
+    base = [_entry(obs_overhead={"overhead_ratio": 1.0})]
+    regs, _ = compare(base, _entry(obs_overhead={"overhead_ratio": 1.2}), 2.5)
+    assert regs == []
+    regs, _ = compare(base, _entry(obs_overhead={"overhead_ratio": 3.0}), 2.5)
+    assert [r["metric"] for r in regs] == ["obs_overhead.overhead_ratio"]
+
+
 def test_compare_directions():
     base = [_entry(a_us=100.0, b_per_s=1000.0),
             _entry(a_us=120.0, b_per_s=900.0)]
