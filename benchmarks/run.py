@@ -416,16 +416,30 @@ def bench_serve(quick=False, warmup=1, reps=3):
 
 
 def bench_serve_batch(quick=False, warmup=1, reps=3):
-    """Continuous-batching headline (DESIGN.md §12): tokens/s serving a
-    queue of mixed-length, staggered-arrival requests through the paged
-    packed-KV batched engine vs the sequential one-request-at-a-time
-    engine, on identical model/cache configuration (quantized + packed KV,
-    fused attention). Also reports page-pool occupancy and the packed pool
-    bytes vs the logical f32 bytes the same pool would hold dense.
+    """Continuous-batching headline (DESIGN.md §12, §14): tokens/s serving
+    a queue of mixed-length, staggered-arrival requests three ways on
+    identical model/cache configuration (quantized + packed KV, fused
+    attention):
 
-    Wall-clock here is host-scheduler dominated (admission, page copies,
+      paged   — the batched engine attending page tables in place (the
+                pool slabs ARE the decode caches; admission adopts page
+                pointers, no dense slot copy)
+      copyin  — the same batched engine with ``paged_decode=False`` (pages
+                gathered into a dense per-slot row on admission, the
+                pre-§14 behaviour, kept as the comparator)
+      seq     — the sequential one-request-at-a-time engine
+
+    Also reports pool-RESIDENT KV bytes (paged holds only live pages;
+    copy-in holds every slot dense at max_seq plus a transit pool), the
+    per-decode-step KV stream bytes, and asserts in-bench that the
+    delta-masked host-mirror upload is bitwise-invisible vs a full
+    re-upload.
+
+    Wall-clock here is host-scheduler dominated (admission, page adoption,
     chunked syncs), so every serve_batch.* metric is trajectory-only
     (check_regression._UNGATED_PREFIXES), like the serve decode metrics."""
+    import gc
+
     import jax
 
     from repro.configs import smoke_config
@@ -436,29 +450,39 @@ def bench_serve_batch(quick=False, warmup=1, reps=3):
     cfg = smoke_config("llama3_2_3b")
     params = init_params(cfg, jax.random.PRNGKey(0))
     slots = 8 if quick else 32
-    N = 12 if quick else 48
+    N = 24 if quick else 96
     max_seq = 128
     rng = np.random.default_rng(11)
     reqs = [Request(uid=u + 1,
                     tokens=rng.integers(0, cfg.vocab_size,
                                         int(rng.integers(4, 33))
                                         ).astype(np.int32),
-                    max_new=int(rng.integers(48, 97)),
+                    # a serving mix: short-to-medium responses, so slot
+                    # turnover (where copy-in pays its dense gather+copy
+                    # per admission and paged adopts pointers) carries its
+                    # real weight next to steady-state decode
+                    max_new=int(rng.integers(8, 33)),
                     # arrivals in decode-step units, dense enough to keep
                     # every slot busy: this bench measures saturated
                     # throughput (the acceptance headline); the staggered
                     # sparse-arrival path is examples/serve_continuous.py
-                    arrival=u // 8)
+                    arrival=u // 16)
             for u in range(N)]
 
     beng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
                                                  max_seq=max_seq), params)
+    ceng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
+                                                 max_seq=max_seq,
+                                                 paged_decode=False), params)
     seng = Engine(cfg, ServeConfig(batch=1, max_seq=max_seq,
                                    quantized_kv=True, packed_kv=True,
                                    fused_attention=True), params)
 
-    def run_batched():
+    def run_paged():
         return beng.run(reqs)
+
+    def run_copyin():
+        return ceng.run(reqs)
 
     def run_sequential():
         return {r.uid: np.asarray(seng.generate(r.tokens[None], r.max_new)[0],
@@ -466,47 +490,87 @@ def bench_serve_batch(quick=False, warmup=1, reps=3):
                 for r in reqs}
 
     for _ in range(max(warmup, 1)):   # compile outside the clock
-        bout = run_batched()
+        bout = run_paged()
+        cout = run_copyin()
         sout = run_sequential()
     match = all(np.array_equal(bout[r.uid], sout[r.uid]) for r in reqs)
+    pmatch = all(np.array_equal(bout[r.uid], cout[r.uid]) for r in reqs)
+
+    # satellite pin: the delta-masked host-mirror upload must be bitwise
+    # invisible — one full-re-upload run of the same queue, same engine
+    # mode, compared token-for-token
+    feng = BatchedEngine(cfg, BatchedServeConfig(slots=slots,
+                                                 max_seq=max_seq,
+                                                 io_upload="full"), params)
+    fout = feng.run(reqs)
+    io_delta_ok = all(np.array_equal(bout[r.uid], fout[r.uid]) for r in reqs)
+    assert io_delta_ok, "delta-masked IO upload changed served tokens"
+    del feng
 
     def tps(fn):
+        gc.collect()
         t0 = time.perf_counter()
         out = fn()
         dt = time.perf_counter() - t0
         return sum(len(v) for v in out.values()) / dt, dt
 
-    runs = [(tps(run_batched), tps(run_sequential))
+    runs = [(tps(run_paged), tps(run_copyin), tps(run_sequential))
             for _ in range(max(reps, 1))]
-    btps = float(np.median([b[0] for b, _ in runs]))
-    stps = float(np.median([s[0] for _, s in runs]))
+    # peak-of-reps, not median: on a shared CPU host the noise is one-sided
+    # (GC pauses, page faults, sibling load slow a run; nothing makes one
+    # faster than the engine's capability), so max is the stable estimator
+    btps = float(np.max([b[0] for b, _, _ in runs]))
+    ctps = float(np.max([c[0] for _, c, _ in runs]))
+    stps = float(np.max([s[0] for _, _, s in runs]))
     # engine-side numbers come from the obs registry snapshot (DESIGN.md
-    # §13) — the same export CI archives — instead of re-deriving them here
-    from repro import obs
-
-    snap = obs.export()["registries"]["serve.batched"]
+    # §13) — the same shape CI archives — read off the paged engine's own
+    # registry (the global name was taken over by the short-lived full-
+    # upload engine: registrations are weak, latest-wins)
+    snap = beng.metrics.export()
     pool = beng.stats["pool"]
+    cpool = ceng.stats["pool"]
     speedup = btps / stps
+    paged_speedup = btps / ctps
     ratio = pool["pool_bytes_packed"] / pool["pool_bytes_logical_f32"]
+    page_b = pool["page_bytes_packed"]
+    maxp = max_seq // beng.page_tokens
+    # resident KV bytes: paged = peak live pages; copy-in = every slot
+    # dense at max_seq (its per-slot caches never shrink) + transit pool
+    paged_resident = pool["peak_used"] * page_b
+    copyin_resident = (slots * maxp + cpool["n_pages"]) * page_b
+    # per decode step both kernels stream at most the slot's table span
+    kv_stream = slots * maxp * page_b
     print(f"serve_batch_tokens_per_s,{btps:.0f},"
           f"seq={stps:.0f}_speedup={speedup:.2f}x_bitwise={match}")
+    print(f"serve_batch_paged_vs_copyin,{paged_speedup:.3f},"
+          f"paged={btps:.0f}_copyin={ctps:.0f}_bitwise={pmatch}"
+          f"_io_delta_bitwise={io_delta_ok}")
     print(f"serve_batch_pool,{pool['peak_used']},"
           f"of={pool['n_pages']}_packed_ratio={ratio:.3f}")
+    print(f"serve_batch_resident_bytes,{paged_resident},"
+          f"copyin={copyin_resident}_stream_per_step={kv_stream}")
     return {
         "slots": slots, "requests": N,
         "batched_tokens_per_s": btps,
+        "copyin_tokens_per_s": ctps,
         "sequential_tokens_per_s": stps,
         "speedup": speedup,
+        "paged_vs_copyin_speedup": paged_speedup,
         "bitwise_match": bool(match),
+        "paged_copyin_bitwise_match": bool(pmatch),
+        "io_delta_bitwise": bool(io_delta_ok),
         "slot_occupancy": snap["gauges"]["slot_occupancy"],
         "emitted_tokens": snap["counters"]["emitted_tokens"]["exact"],
         "ttft_ms_p50": snap["histograms"]["ttft_ms"]["p50"],
         "tbt_ms_p50": snap["histograms"]["tbt_ms"]["p50"],
         "pool_peak_occupancy": pool["peak_used"] / pool["n_pages"],
-        "page_bytes_packed": pool["page_bytes_packed"],
+        "page_bytes_packed": page_b,
         "pool_bytes_packed": pool["pool_bytes_packed"],
         "pool_bytes_logical_f32": pool["pool_bytes_logical_f32"],
         "packed_ratio": ratio,
+        "paged_resident_bytes": int(paged_resident),
+        "copyin_resident_bytes": int(copyin_resident),
+        "kv_stream_bytes_per_step": int(kv_stream),
     }
 
 

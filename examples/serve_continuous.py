@@ -3,10 +3,12 @@ packed-F2P KV pool (DESIGN.md §12), with optional observability capture.
 
 Serves a queue of mixed-length requests arriving at different times through
 :class:`repro.serve.BatchedEngine` — dynamic admission into fixed decode
-slots over a paged pool of packed-KV slabs — then replays every request
-one-at-a-time through the sequential :class:`repro.serve.Engine` and asserts
-the greedy outputs are BIT-FOR-BIT identical. Reports aggregate tokens/s for
-both, plus the pool's packed-vs-logical-f32 footprint.
+slots whose KV is attended THROUGH page tables over the packed pool slabs
+(DESIGN.md §14; no dense slot rows) — then replays every request through
+the copy-in engine (``paged_decode=False``) and one-at-a-time through the
+sequential :class:`repro.serve.Engine`, asserting the greedy outputs are
+BIT-FOR-BIT identical three ways. Reports aggregate tokens/s, plus the
+pool's packed-vs-logical-f32 footprint.
 
 ``--trace PATH`` arms the obs span tracer (DESIGN.md §13) for the timed run
 and writes a Chrome/Perfetto trace_event JSON: open it at https://ui.perfetto.dev
@@ -63,7 +65,9 @@ def _validate_trace(path: str, reqs, eng) -> None:
         assert want in names, f"engine timeline missing {want!r} events"
     # metrics <-> stats consistency: the registry's exact shadows ARE the
     # engine.stats numbers, and the TTFT histogram saw every request
-    snap = obs.export()["registries"]["serve.batched"]
+    # (export from the engine's own registry — the weak obs name registry
+    # is latest-wins, and the copy-in reference engine also registered)
+    snap = eng.metrics.export()
     assert snap["counters"]["prefills"]["exact"] == eng.stats["prefills"]
     assert snap["histograms"]["ttft_ms"]["count"] == eng.stats["prefills"]
     assert snap["counters"]["emitted_tokens"]["exact"] == \
@@ -104,6 +108,15 @@ def main():
         obs.disable()
     ntok = sum(len(v) for v in out.values())
 
+    # the PR-8 copy-in engine (dense slot rows, pages gathered in) is the
+    # paged path's bitwise reference — same queue, same schedule
+    ceng = BatchedEngine(cfg, BatchedServeConfig(slots=slots, max_seq=max_seq,
+                                                 paged_decode=False), params)
+    cout = ceng.run(reqs)
+    for r in reqs:
+        assert np.array_equal(out[r.uid], cout[r.uid]), \
+            f"request {r.uid}: paged output diverged from copy-in"
+
     seq = Engine(cfg, ServeConfig(batch=1, max_seq=max_seq,
                                   quantized_kv=True, packed_kv=True,
                                   fused_attention=True), params)
@@ -117,18 +130,20 @@ def main():
     for r in reqs:
         assert np.array_equal(out[r.uid], want[r.uid]), \
             f"request {r.uid}: batched output diverged from sequential"
-    print(f"{n_req} requests bit-for-bit identical to the sequential engine")
+    print(f"{n_req} requests bit-for-bit identical to the copy-in engine "
+          f"AND the sequential engine")
 
     pool = eng.stats["pool"]
     print(f"batched   : {ntok / dt_b:8.0f} tok/s "
-          f"({slots} slots, occupancy {eng.stats['slot_occupancy']:.2f}, "
+          f"(paged decode, {slots} slots, occupancy "
+          f"{eng.stats['slot_occupancy']:.2f}, "
           f"{eng.stats.get('preemptions', 0)} preemptions)")
     print(f"sequential: {ntok / dt_s:8.0f} tok/s (batch=1 replay)")
     print(f"speedup   : {dt_s / dt_b:8.2f}x")
     print(f"KV pool   : {pool['pool_bytes_packed'] / 1e3:.1f} KB packed vs "
           f"{pool['pool_bytes_logical_f32'] / 1e3:.1f} KB logical f32 "
           f"({pool['peak_used']}/{pool['n_pages']} pages peak)")
-    snap = obs.export()["registries"]["serve.batched"]
+    snap = eng.metrics.export()
     print(f"latency   : ttft p50 {snap['histograms']['ttft_ms']['p50']:.1f} ms"
           f", tbt p50 {snap['histograms']['tbt_ms']['p50']:.2f} ms "
           f"(F2P-estimated histograms)")

@@ -42,6 +42,12 @@ op actually has an implementation for it. Registered ops:
                                            word tiles with in-register
                                            unpack + decode
                                            (``kernels/f2p_attention.py``)
+  ``attention_paged``                      the same fused attention reading
+                                           KV word tiles THROUGH a per-row
+                                           page table straight from the pool
+                                           slabs — no dense per-request KV
+                                           row exists
+                                           (``kernels/f2p_attention.py``)
   ``counter_advance`` / ``counter_estimate``  batched probabilistic grid-counter
                                            updates + decode-LUT estimate reads
                                            for the sketch engine

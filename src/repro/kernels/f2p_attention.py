@@ -45,6 +45,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.f2p import F2PFormat
 from repro.core.qtensor import QTensor
@@ -53,8 +54,9 @@ from repro.kernels.bits import unpack_bits
 from repro.kernels.f2p_quant import dequantize_tile_math
 
 __all__ = ["attention_packed", "attention_packed_reference",
-           "attention_reference", "attention_tile", "set_attention_tile",
-           "autotune_attention_tile", "DEFAULT_TILE"]
+           "attention_paged", "attention_paged_reference",
+           "gather_pages_to_dense", "attention_reference", "attention_tile",
+           "set_attention_tile", "autotune_attention_tile", "DEFAULT_TILE"]
 
 # kv-tile length (cache positions per grid step). Per-(backend, n_bits)
 # overrides mirror the matmul tile table (f2p_matmul._TILE_TABLE): narrow
@@ -323,6 +325,268 @@ def attention_packed(q, kq: QTensor, vq: QTensor, *, kv_len=None,
     o3 = fn(_fold_q(q, K), kq.codes, kq.scales, vq.codes, vq.scales, lens,
             fmt_k=kq.fmt, fmt_v=vq.fmt, sq=Sq, causal=bool(causal), tile=tile)
     return _unfold_o(o3, Sq, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the KV never leaves the pool. Instead of a dense per-request
+# cache row [B, S, K, hd], each batch row carries an ordered page-id list into
+# the pool slabs [P, page_tokens, K, *] (``serve.paging.PagedKVPool``, the
+# leading layer-group axis stripped by the model's scan). Every kv tile
+# gathers its packed uint32 words and per-row scales THROUGH the page table —
+# word-granular by construction, since §9's block=head_dim packing gives every
+# token whole words and a page boundary can never split one. Tiles must span
+# whole pages (tile % page_tokens == 0), which the default tile table
+# satisfies for power-of-two page sizes; with the same tile, outputs are
+# bitwise-identical to gathering the pages into a dense row and running
+# :func:`attention_packed` (decode is elementwise per token row, so
+# decode(gather) == gather(decode) exactly, and the online-softmax tile loop
+# sees identical values in identical order).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("fmt_k", "fmt_v", "sq",
+                                             "causal", "tile"))
+def _attention_paged_xla(q3, kw, ks, vw, vs, pages, lens, *, fmt_k, fmt_v,
+                         sq, causal, tile):
+    B, K, R, hd = q3.shape
+    T = kw.shape[1]
+    ppt = tile // T
+    nt = pages.shape[1] // ppt
+    pgt = pages.reshape(B, nt, ppt).transpose(1, 0, 2)   # [nt, B, ppt]
+    kvlen, qoff = lens[:, 0], lens[:, 1]
+    scale = 1.0 / math.sqrt(hd)
+    step = jax.vmap(jax.vmap(_online_step, in_axes=(0, 0, 0, None, 0, 0, 0,
+                                                    None)),
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+
+    def gather_tile(slab_w, slab_s, pj, fmt):
+        # slab [P, T, K, *], pj [B, ppt] -> [B, K, tile, hd] f32
+        w = jnp.take(slab_w, pj, axis=0)                 # [B, ppt, T, K, W]
+        s = jnp.take(slab_s, pj, axis=0)
+        x = _decode_rows(w, s, fmt, hd)                  # [B, ppt, T, K, hd]
+        return x.reshape(B, tile, K, hd).transpose(0, 2, 1, 3)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        j, pj = inp
+        kb = gather_tile(kw, ks, pj, fmt_k)
+        vb = gather_tile(vw, vs, pj, fmt_v)
+        valid = jax.vmap(
+            lambda kl, qo: _tile_mask(j, tile, R, sq, causal, kl, qo)
+        )(kvlen, qoff)                                   # [B, R, tile]
+        return step(q3, kb, vb, valid, acc, m, l, scale), None
+
+    acc0 = jnp.zeros((B, K, R, hd), jnp.float32)
+    m0 = jnp.full((B, K, R, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, R, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (jnp.arange(nt), pgt))
+    return _finalize(acc, l)
+
+
+def _paged_kernel(fmt_k, fmt_v, sq, causal, scale, tile, nt, ppt, T,
+                  ids_ref, *refs):
+    """Pallas body: the grid's kv step j receives its tile as ``ppt``
+    separate page blocks, DMA'd straight from the pool slabs through the
+    scalar-prefetched page table (the index_maps below read ``ids_ref``).
+    Concatenating the page blocks re-forms the contiguous tile, after which
+    the math is byte-for-byte the dense kernel's."""
+    q_ref = refs[0]
+    kw_refs = refs[1:1 + ppt]
+    ks_refs = refs[1 + ppt:1 + 2 * ppt]
+    vw_refs = refs[1 + 2 * ppt:1 + 3 * ppt]
+    vs_refs = refs[1 + 3 * ppt:1 + 4 * ppt]
+    len_ref = refs[1 + 4 * ppt]
+    o_ref, m_ref, l_ref = refs[2 + 4 * ppt:5 + 4 * ppt]
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    R, hd = q_ref.shape[-2], q_ref.shape[-1]
+    q2 = q_ref[...].reshape(R, hd)
+    kw_t = jnp.concatenate([r[...].reshape(T, -1) for r in kw_refs], axis=0)
+    ks_t = jnp.concatenate([r[...].reshape(T, 1) for r in ks_refs], axis=0)
+    vw_t = jnp.concatenate([r[...].reshape(T, -1) for r in vw_refs], axis=0)
+    vs_t = jnp.concatenate([r[...].reshape(T, 1) for r in vs_refs], axis=0)
+    k_t = _decode_rows(kw_t, ks_t, fmt_k, hd)
+    v_t = _decode_rows(vw_t, vs_t, fmt_v, hd)
+    valid = _tile_mask(j, tile, R, sq, causal, len_ref[0, 0], len_ref[0, 1])
+    acc, m, l = _online_step(q2, k_t, v_t, valid,
+                             o_ref[...].reshape(R, hd),
+                             m_ref[...].reshape(R, 1),
+                             l_ref[...].reshape(R, 1), scale)
+    o_ref[...] = acc.reshape(o_ref.shape)
+    m_ref[...] = m.reshape(m_ref.shape)
+    l_ref[...] = l.reshape(l_ref.shape)
+
+    @pl.when(j == nt - 1)
+    def _fin():
+        o_ref[...] = _finalize(o_ref[...].reshape(R, hd),
+                               l_ref[...].reshape(R, 1)).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_k", "fmt_v", "sq", "causal",
+                                             "tile", "interpret"))
+def _attention_paged_pallas(q3, kw, ks, vw, vs, pages, lens, *, fmt_k, fmt_v,
+                            sq, causal, tile, interpret):
+    B, K, R, hd = q3.shape
+    T = kw.shape[1]
+    ppt = tile // T
+    nt = pages.shape[1] // ppt
+    Wk, Wv = kw.shape[-1], vw.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    def page_spec(W, p):
+        # one page block per spec: row p of kv tile j lives at slab page
+        # ids[b, j*ppt + p] — the indirection happens in the index_map, so
+        # the kernel never sees a dense row and each page is one DMA
+        return pl.BlockSpec(
+            (1, T, 1, W),
+            lambda b, h, j, ids, _p=p: (ids[b, j * ppt + _p], 0, h, 0))
+
+    in_specs = [pl.BlockSpec((1, 1, R, hd), lambda b, h, j, ids: (b, h, 0, 0))]
+    for W in (Wk, 1, Wv, 1):
+        in_specs.extend(page_spec(W, p) for p in range(ppt))
+    in_specs.append(pl.BlockSpec((1, 2), lambda b, h, j, ids: (b, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, nt),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, h, j, ids: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, 1), lambda b, h, j, ids: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, 1), lambda b, h, j, ids: (b, h, 0, 0)),
+        ],
+    )
+    out, _, _ = pl.pallas_call(
+        functools.partial(_paged_kernel, fmt_k, fmt_v, sq, causal, scale,
+                          tile, nt, ppt, T),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, R, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages, q3, *([kw] * ppt), *([ks] * ppt), *([vw] * ppt), *([vs] * ppt),
+      lens)
+    return out
+
+
+@dispatch.register("attention_paged", dispatch.PALLAS)
+def _attn_paged_pallas(q3, kw, ks, vw, vs, pages, lens, **kw_static):
+    return _attention_paged_pallas(q3, kw, ks, vw, vs, pages, lens,
+                                   interpret=False, **kw_static)
+
+
+@dispatch.register("attention_paged", dispatch.PALLAS_INTERPRET)
+def _attn_paged_pallas_interp(q3, kw, ks, vw, vs, pages, lens, **kw_static):
+    return _attention_paged_pallas(q3, kw, ks, vw, vs, pages, lens,
+                                   interpret=True, **kw_static)
+
+
+@dispatch.register("attention_paged", dispatch.XLA)
+def _attn_paged_xla(q3, kw, ks, vw, vs, pages, lens, **kw_static):
+    return _attention_paged_xla(q3, kw, ks, vw, vs, pages, lens, **kw_static)
+
+
+def _check_slab(qt: QTensor, hd: int, what: str) -> None:
+    if not isinstance(qt, QTensor):
+        raise TypeError(f"{what} must be a QTensor, got {type(qt).__name__}")
+    if not qt.packed:
+        raise ValueError(f"{what} must be bit-packed (QTensor.packed=True)")
+    if qt.codes.ndim != 4:
+        raise ValueError(f"{what} slab codes must be [n_pages, page_tokens, "
+                         f"K, words], got {qt.codes.shape}")
+    if qt.block != hd or qt.shape[-1] != hd:
+        raise ValueError(f"{what} must be blocked over head_dim={hd}, got "
+                         f"block={qt.block} shape={qt.shape}")
+
+
+def attention_paged(q, kq: QTensor, vq: QTensor, pages, *, kv_len=None,
+                    causal: bool = False, q_offset=0,
+                    backend: str | None = None, tile: int | None = None):
+    """Fused attention THROUGH a page table — no dense KV row exists.
+
+    q ``[B, Sq, H, hd]``; kq/vq are packed pool-slab QTensors whose codes
+    leaves are ``[n_pages, page_tokens, K, words]`` (a
+    ``serve.paging.PagedKVPool`` slab with the layer-group axis stripped by
+    the model scan); ``pages`` ``[B, max_pages]`` int32 orders each batch
+    row's pages. The logical per-row sequence length is
+    ``max_pages * page_tokens``; ``kv_len``/``q_offset`` behave exactly as in
+    :func:`attention_packed` (positions >= kv_len — including every position
+    of unassigned/garbage page ids — contribute exactly 0.0, because the mask
+    sets their scores to -inf before exp). With the same ``tile``, output is
+    bitwise-identical to :func:`attention_packed` over
+    :func:`gather_pages_to_dense` of the same table.
+    """
+    B, Sq, H, hd = q.shape
+    _check_slab(kq, hd, "kq")
+    _check_slab(vq, hd, "vq")
+    P, T, K = kq.codes.shape[0], kq.codes.shape[1], kq.codes.shape[2]
+    if H % K:
+        raise ValueError(f"n_heads {H} not a multiple of kv heads {K}")
+    pages = jnp.asarray(pages, jnp.int32)
+    if pages.ndim != 2 or pages.shape[0] != B:
+        raise ValueError(f"pages must be [B={B}, max_pages], "
+                         f"got {pages.shape}")
+    maxp = pages.shape[1]
+    S = maxp * T
+    b, fn = dispatch.lookup("attention_paged", backend)
+    if tile is None:
+        tile = attention_tile(b, kq.fmt.n_bits)
+    tile = max(1, min(int(tile), S))
+    if tile % T:
+        raise ValueError(
+            f"kv tile {tile} not a multiple of page_tokens {T}: paged tiles "
+            "must span whole pages (pick a page size dividing the attention "
+            "tile so the paged and copy-in engines share a tile)")
+    ppt = tile // T
+    nt = -(-maxp // ppt)
+    # clamp garbage ids defensively (masked anyway) and pad the table out to
+    # whole tiles; padding pages sit at positions >= S >= kv_len -> masked
+    pages = jnp.clip(pages, 0, P - 1)
+    if nt * ppt > maxp:
+        pages = jnp.pad(pages, ((0, 0), (0, nt * ppt - maxp)))
+    lens = _make_lens(kv_len, q_offset, B, S)
+    o3 = fn(_fold_q(q, K), kq.codes, kq.scales, vq.codes, vq.scales, pages,
+            lens, fmt_k=kq.fmt, fmt_v=vq.fmt, sq=Sq, causal=bool(causal),
+            tile=tile)
+    return _unfold_o(o3, Sq, q.dtype)
+
+
+def gather_pages_to_dense(qt: QTensor, pages) -> QTensor:
+    """Materialize page tables as a dense cache: slab ``[P, T, K, *]`` +
+    ``pages [B, maxp]`` -> ``[B, maxp*T, K, hd]`` QTensor. A pure uint32
+    word/scale gather — zero repack, bit-exact by construction. The
+    copy-in comparator for :func:`attention_paged` (and what
+    ``PagedKVPool.load_into_slot`` does for the copy-in engine)."""
+    pages = jnp.asarray(pages, jnp.int32)
+    codes = jnp.take(qt.codes, pages, axis=0)     # [B, maxp, T, K, W]
+    scales = jnp.take(qt.scales, pages, axis=0)
+    B, mp, T = codes.shape[:3]
+    codes = codes.reshape((B, mp * T) + codes.shape[3:])
+    scales = scales.reshape((B, mp * T) + scales.shape[3:])
+    return QTensor.from_parts(codes, scales, qt.fmt, qt.block,
+                              (B, mp * T) + tuple(qt.shape[-2:]),
+                              packed=qt.packed)
+
+
+def attention_paged_reference(q, kq: QTensor, vq: QTensor, pages, *,
+                              kv_len=None, causal: bool = False, q_offset=0,
+                              tile: int | None = None):
+    """The copy-in path the paged kernel replaces: gather the page table
+    into a dense row (HBM copy), then run :func:`attention_packed` on it.
+    The bitwise-parity oracle for :func:`attention_paged`."""
+    kd = gather_pages_to_dense(kq, pages)
+    vd = gather_pages_to_dense(vq, pages)
+    if tile is None:
+        b, _ = dispatch.lookup("attention_paged", None)
+        tile = attention_tile(b, kq.fmt.n_bits)
+    return attention_packed(q, kd, vd, kv_len=kv_len, causal=causal,
+                            q_offset=q_offset, backend="xla", tile=tile)
 
 
 def attention_reference(q, k, v, *, kv_len=None, causal: bool = False,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.core import qtensor as QT
 from repro.core.f2p import F2PFormat, Flavor
 from repro.core.qtensor import QTensor
-from repro.kernels.f2p_attention import attention_packed
+from repro.kernels.f2p_attention import attention_packed, attention_paged
 from repro.models.common import apply_rope, truncnorm_init
 
 KV_FMT = F2PFormat(n_bits=8, h_bits=2, flavor=Flavor.SR, signed=True)
@@ -234,8 +234,16 @@ def chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0,
 # Block-level apply
 # ---------------------------------------------------------------------------
 def attention_apply(params, x, cfg, *, mode: str, cache=None, pos_offset=0,
-                    cross_kv=None, causal=True):
-    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache)."""
+                    cross_kv=None, causal=True, pages=None):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache).
+
+    ``pages`` (decode only): a ``[B, max_pages]`` int32 page table. When set,
+    ``cache`` is a pool SLAB (``{"k","v"}`` QTensors, codes
+    ``[n_pages, page_tokens, K, words]``) instead of a dense per-row cache:
+    the new token's KV is quantized and scattered into the slab page holding
+    position ``pos_offset`` and attention reads word tiles straight through
+    the table (``attention_paged``) — no dense ``[B, max_seq]`` row exists
+    anywhere in the decode path."""
     B, S, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, H, hd)
@@ -267,6 +275,13 @@ def attention_apply(params, x, cfg, *, mode: str, cache=None, pos_offset=0,
         out = _attend(q, k, v, cfg, causal=causal)
     elif mode == "decode":
         assert S == 1
+        if pages is not None:
+            new_cache = _paged_cache_write(cache, k, v, pos_offset, pages)
+            out = attention_paged(q, new_cache["k"], new_cache["v"], pages,
+                                  kv_len=jnp.asarray(pos_offset) + 1)
+            proj = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                              params["wo"])
+            return proj, new_cache
         new_cache = _cache_write_decode(cache, k, v, pos_offset)
         if (cfg.fused_attention and isinstance(new_cache["k"], QTensor)
                 and new_cache["k"].packed):
@@ -370,6 +385,30 @@ def _cache_write(cache, k, v, idx):
                 "v": _rowwise_update(cache["v"], v, idx)}
     upd = jax.lax.dynamic_update_slice_in_dim
     return {"k": upd(cache["k"], k, idx, 1), "v": upd(cache["v"], v, idx, 1)}
+
+
+def _paged_cache_write(cache, k, v, pos, pages):
+    """Decode write straight into the pool slabs: quantize the new token's
+    k/v ``[B, 1, K, hd]`` and scatter the packed words into slab page
+    ``pages[b, pos // T]`` at in-page offset ``pos % T``. Rows own whole
+    words (block = head_dim), so the scatter is an exact word write.
+    Live slots never share a page, so the per-row scatter is conflict-free;
+    retired slots all point at the engine's dump page, whose contents are
+    never read (their positions are masked by kv_len)."""
+    T = cache["k"].codes.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (pages.shape[0],))
+    pidx = jnp.take_along_axis(jnp.asarray(pages, jnp.int32),
+                               (pos // T)[:, None], axis=1)[:, 0]
+    off = pos % T
+
+    def wr(qt: QTensor, x) -> QTensor:
+        up = quantize_kv(x, qt.fmt, packed=True)          # [B, 1, K, *]
+        return QTensor.from_parts(
+            qt.codes.at[pidx, off].set(up.codes[:, 0]),
+            qt.scales.at[pidx, off].set(up.scales[:, 0]),
+            qt.fmt, qt.block, qt.shape, packed=qt.packed)
+
+    return {"k": wr(cache["k"], k), "v": wr(cache["v"], v)}
 
 
 def _cache_write_prefill(cache, k, v):

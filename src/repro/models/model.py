@@ -89,7 +89,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
 # Blocks
 # ---------------------------------------------------------------------------
 def _apply_block(p, x, cfg, spec: BlockSpec, *, mode, cache, pos_offset,
-                 cross_kv, causal=True):
+                 cross_kv, causal=True, pages=None):
     # sequence parallelism: residual stream is seq-sharded over the model
     # axis; the norm is per-token so it runs seq-sharded, and the gather to
     # full-seq happens on the (already normalized) mixer/FF inputs only.
@@ -106,7 +106,7 @@ def _apply_block(p, x, cfg, spec: BlockSpec, *, mode, cache, pos_offset,
     if spec.mixer == "attn":
         h, new_c = A.attention_apply(p["mixer"], h, cfg, mode=mode,
                                      cache=cache, pos_offset=pos_offset,
-                                     causal=causal)
+                                     causal=causal, pages=pages)
     elif spec.mixer == "mamba":
         h, new_c = SSM.mamba_apply(p["mixer"], h, cfg, mode=mode, cache=cache)
     elif spec.mixer == "mlstm":
@@ -137,23 +137,71 @@ def _apply_block(p, x, cfg, spec: BlockSpec, *, mode, cache, pos_offset,
 
 
 def _run_stack(params_blocks, x, cfg, *, mode, caches=None, pos_offset=0,
-               cross_kv=None, causal=True):
-    """Scan the grouped block stack. caches: pytree with leading [G] dims."""
+               cross_kv=None, causal=True, pages=None):
+    """Scan the grouped block stack. caches: pytree with leading [G] dims.
+
+    ``pages`` (paged decode): one page table shared by every attention layer
+    — a pool page holds all layers' KV for its positions at once. The
+    attention slabs do NOT ride the scan's xs/ys (which would slice and
+    restack the whole pool every step, a per-step copy proportional to pool
+    capacity): they thread through the CARRY flattened to ``[(G*P), ...]``,
+    each group addressing its own pages as ids offset by ``g * P``, so the
+    per-step slab traffic is the handful of gathered/scattered pages the
+    kernel actually touches and XLA keeps the carry buffer in place."""
+    from repro.core.qtensor import QTensor
+
+    attn_keys = [f"b{i}" for i, s in enumerate(cfg.pattern)
+                 if s.mixer == "attn"]
+    paged = pages is not None and caches is not None and attn_keys
+    n_pages = None
+    slab_flat = None
+    if paged:
+        def flat(qt: QTensor) -> QTensor:
+            Gp = qt.codes.shape[0] * qt.codes.shape[1]
+            return QTensor.from_parts(
+                qt.codes.reshape((Gp,) + qt.codes.shape[2:]),
+                qt.scales.reshape((Gp,) + qt.scales.shape[2:]),
+                qt.fmt, qt.block, (Gp,) + tuple(qt.shape[2:]),
+                packed=qt.packed)
+
+        n_pages = caches[attn_keys[0]]["k"].codes.shape[1]
+        slab_shapes = {k: {kv: (tuple(caches[k][kv].codes.shape),
+                                tuple(caches[k][kv].scales.shape),
+                                tuple(caches[k][kv].shape))
+                           for kv in ("k", "v")} for k in attn_keys}
+        slab_flat = {k: {kv: flat(caches[k][kv]) for kv in ("k", "v")}
+                     for k in attn_keys}
+        caches = {k: v for k, v in caches.items() if k not in attn_keys}
 
     def body(carry, xs):
-        x, aux_sum = carry
+        if paged:
+            x, aux_sum, slabs, g = carry
+            slabs = dict(slabs)
+        else:
+            x, aux_sum = carry
         gp, gc = xs
         new_caches = {}
         for i, spec in enumerate(cfg.pattern):
-            c = None if gc is None else gc.get(f"b{i}")
-            x, nc, aux = _apply_block(gp[f"b{i}"], x, cfg, spec, mode=mode,
+            key = f"b{i}"
+            is_slab = paged and spec.mixer == "attn"
+            if is_slab:
+                c, pg = slabs[key], pages + g * n_pages
+            else:
+                c, pg = (None if gc is None else gc.get(key)), pages
+            x, nc, aux = _apply_block(gp[key], x, cfg, spec, mode=mode,
                                       cache=c, pos_offset=pos_offset,
-                                      cross_kv=cross_kv, causal=causal)
-            if nc is not None:
-                new_caches[f"b{i}"] = nc
+                                      cross_kv=cross_kv, causal=causal,
+                                      pages=pg)
+            if is_slab:
+                slabs[key] = nc
+            elif nc is not None:
+                new_caches[key] = nc
             if aux is not None:
                 aux_sum = aux_sum + aux["aux_loss"]
-        return (x, aux_sum), (new_caches if new_caches else None)
+        ys = new_caches if new_caches else None
+        if paged:
+            return (x, aux_sum, slabs, g + 1), ys
+        return (x, aux_sum), ys
 
     if cfg.remat and mode == "train":
         body = jax.checkpoint(body)
@@ -165,6 +213,21 @@ def _run_stack(params_blocks, x, cfg, *, mode, caches=None, pos_offset=0,
         (x, aux), _ = jax.lax.scan(lambda c, gp: body(c, (gp, None)),
                                    (x, 0.0), params_blocks)
         return x, aux, None
+    if paged:
+        if not caches:
+            xs = (params_blocks, None)
+        (x, aux, slabs_f, _), ys = jax.lax.scan(
+            body, (x, 0.0, slab_flat, jnp.int32(0)), xs)
+        new_caches = dict(ys) if ys else {}
+        for k in attn_keys:
+            new_caches[k] = {
+                kv: QTensor.from_parts(
+                    slabs_f[k][kv].codes.reshape(slab_shapes[k][kv][0]),
+                    slabs_f[k][kv].scales.reshape(slab_shapes[k][kv][1]),
+                    slabs_f[k][kv].fmt, slabs_f[k][kv].block,
+                    slab_shapes[k][kv][2], packed=slabs_f[k][kv].packed)
+                for kv in ("k", "v")}
+        return x, aux, new_caches
     (x, aux), new_caches = jax.lax.scan(body, (x, 0.0), xs)
     return x, aux, new_caches
 
@@ -256,8 +319,12 @@ def train_forward(params, batch, cfg: ModelConfig):
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
                 quantized_kv: bool = False, kv_policy=None,
-                packed_kv: bool | None = None):
+                packed_kv: bool | None = None, attn_kv: bool = True):
     """Cache pytree with leading [G] dim per pattern position.
+
+    ``attn_kv=False`` leaves attention positions empty (``None``): the paged
+    decode engine binds pool SLABS there instead — no dense
+    ``[batch, max_seq]`` attention row is ever allocated (DESIGN.md §14).
 
     ``kv_policy`` (repro.autotune.policy.FormatPolicy | None) picks the
     quantized-KV format per pattern position: rule paths are ``kv/b<i>``
@@ -275,6 +342,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
 
     def one(i: int, spec: BlockSpec):
         if spec.mixer == "attn":
+            if not attn_kv:
+                return None
             fmt = A.KV_FMT
             if kv_policy is not None:
                 fmt, _ = kv_policy.f2p_for(f"kv/b{i}", (fmt, 0))
@@ -318,10 +387,15 @@ def prefill(params, batch, cfg: ModelConfig, caches, last_index=None):
     return logits[:, 0], caches
 
 
-def decode_step(params, token, pos, caches, cfg: ModelConfig, cross_kv=None):
+def decode_step(params, token, pos, caches, cfg: ModelConfig, cross_kv=None,
+                pages=None):
     """One decode step. token [B,1]; pos scalar int32 (current write index)
     or a per-slot [B] vector (continuous batching: every slot decodes at its
-    own sequence point). Returns (logits [B,V], new caches)."""
+    own sequence point). Returns (logits [B,V], new caches).
+
+    ``pages`` ([B, max_pages] int32, optional): paged decode — attention
+    caches are pool slabs attended in place through the page table
+    (DESIGN.md §14) instead of dense per-slot rows."""
     x = _embed_tokens(params, token, cfg)
     if cfg.pos == "sinusoidal":
         table = jnp.asarray(sinusoidal_positions(cfg_max_pos(cfg), cfg.d_model),
@@ -331,7 +405,8 @@ def decode_step(params, token, pos, caches, cfg: ModelConfig, cross_kv=None):
         else:
             x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0)[None]
     x, _, caches = _run_stack(params["blocks"], x, cfg, mode="decode",
-                              caches=caches, pos_offset=pos, cross_kv=cross_kv)
+                              caches=caches, pos_offset=pos,
+                              cross_kv=cross_kv, pages=pages)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _lm_logits(params, x, cfg)
     return logits[:, 0], caches

@@ -48,17 +48,20 @@ def make_batched_decode_step(cfg: ModelConfig, *, temperature: float,
                              seed: int, max_seq: int):
     """One fused multi-slot decode step.
 
-    step(params, caches, tok [B,1], pos [B], req [B])
+    step(params, caches, tok [B,1], pos [B], req [B], pages)
         -> (next_tok [B,1], caches, next_pos [B])
 
     ``pos`` is per-slot (every request decodes at its own sequence point);
     ``req`` carries request ids so temperature sampling is a pure function
     of (engine seed, request id, position) — co-scheduling can never perturb
     a request's sample stream (ISSUE 8 satellite fix, pinned by
-    tests/test_serve_batched.py)."""
+    tests/test_serve_batched.py). ``pages`` (``[B, max_pages]`` int32 or
+    None) switches attention caches to paged-in-place pool slabs
+    (DESIGN.md §14)."""
 
-    def step(params, caches, tok, pos, req):
-        logits, caches = decode_step(params, tok, pos, caches, cfg)
+    def step(params, caches, tok, pos, req, pages=None):
+        logits, caches = decode_step(params, tok, pos, caches, cfg,
+                                     pages=pages)
         if temperature > 0:
             base = jax.random.PRNGKey(seed)
 

@@ -178,6 +178,25 @@ class PagedKVPool:
                 raise ValueError(f"bad free of page {p}")
         self._free.extend(sorted(pages, reverse=True))
 
+    def extend(self, table: PageTable, n: int) -> list[int]:
+        """Grow a live table by ``n`` fresh pages (paged decode's lazy
+        growth: the engine appends pages just ahead of the write position,
+        so a request only ever owns pages covering tokens it will actually
+        write this round)."""
+        new = self.alloc(n)
+        table.pages.extend(new)
+        return new
+
+    def trim(self, table: PageTable, length: int) -> None:
+        """Shrink a table to the pages covering ``length`` tokens, freeing
+        look-ahead growth pages beyond them, and record the live length
+        (park/evict keep only live KV)."""
+        keep = self.pages_for(length)
+        if keep < len(table.pages):
+            self.free(table.pages[keep:])
+            del table.pages[keep:]
+        table.length = int(length)
+
     # -- page <-> slab movement -------------------------------------------
     def _each_leaf(self):
         for key in self.attn_keys:
@@ -324,6 +343,12 @@ class PagedKVPool:
     def pool_bytes_packed(self) -> int:
         return sum(self.slabs[k][kv].nbytes for k, kv in self._each_leaf())
 
+    def pool_bytes_live_packed(self) -> int:
+        """Packed bytes of the ALLOCATED pages only — with paged decode this
+        IS the resident KV footprint (slot KV scales with live tokens at
+        page granularity, not with slots * max_seq)."""
+        return self.used * self.page_bytes_packed()
+
     def pool_bytes_logical_f32(self) -> int:
         """What the same pool would weigh holding dense f32 KV."""
         total = 0
@@ -340,5 +365,6 @@ class PagedKVPool:
             "page_tokens": self.page_tokens,
             "page_bytes_packed": self.page_bytes_packed(),
             "pool_bytes_packed": self.pool_bytes_packed(),
+            "pool_bytes_live_packed": self.pool_bytes_live_packed(),
             "pool_bytes_logical_f32": self.pool_bytes_logical_f32(),
         }

@@ -315,7 +315,9 @@ def test_engine_stats_view_includes_event_keys_lazily(serve_setup):
     assert st["prefills"] == len(reqs)
     assert st.get("preemptions", 0) > 0
     assert st.get("readmits", 0) > 0
-    assert st["pool"]["used"] == 0
+    # every request page freed at retirement; paged decode keeps only the
+    # engine-lifetime dump page (DESIGN.md §14.2) allocated
+    assert st["pool"]["used"] == (1 if eng.paged else 0)
     # tbt histogram saw the multi-token requests
     assert eng.metrics["tbt_ms"].count == len(reqs)
     # queue-wait recorded once per admission

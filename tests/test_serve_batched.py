@@ -64,7 +64,9 @@ def test_batched_matches_sequential_mixed_lengths(setup):
     for r in reqs:
         np.testing.assert_array_equal(out[r.uid], seq[r.uid])
     assert eng.stats["prefills"] == len(reqs)
-    assert eng.stats["pool"]["used"] == 0          # all pages reclaimed
+    # all request pages reclaimed; only the engine's reserved dump page
+    # (paged decode) stays allocated for its lifetime
+    assert eng.stats["pool"]["used"] == eng.stats.get("reserved_pages", 0)
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
@@ -76,13 +78,16 @@ def test_page_relocation_bitwise_on_decode(setup, monkeypatch, backend,
     """Relocating (and compacting) a request's pages between prefill-store
     and slot-load must not flip a single decode token: pages move as whole
     uint32 words (block = head_dim), never repacked. Pinned across n_bits
-    and on both kernel backends."""
+    and on both kernel backends. Runs the copy-in engine, where pages are a
+    transit store and a single-table compact is safe (the paged engine's
+    in-place defrag is pinned by test_paged_defrag_compact_mid_decode)."""
     cfg, params = setup
     monkeypatch.setenv("F2P_BACKEND", backend)
     pol = FormatPolicy(rules=(PolicyRule("kv/*", fmt, 0),))
     reqs = _requests(cfg, 3, seed=nbits, max_new=6)
     eng = BatchedEngine(cfg, BatchedServeConfig(slots=2, max_seq=32,
-                                                kv_policy=pol), params)
+                                                kv_policy=pol,
+                                                paged_decode=False), params)
     store = eng.pool.store_prefill
 
     def store_then_relocate(caches, length, row=0):
@@ -277,3 +282,155 @@ def test_admission_rejects_oversized_request(setup):
     bad = Request(uid=1, tokens=np.zeros(20, np.int32), max_new=20)
     with pytest.raises(ValueError):
         eng.run([bad])
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: paged decode attends the page tables in place
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("nbits,fmt", [(6, "f2p_sr_2_6s"),
+                                       (8, "f2p_sr_2_8s"),
+                                       (16, "f2p_lr_2_16s")])
+def test_paged_vs_copy_in_engine_bitwise(setup, monkeypatch, backend, nbits,
+                                         fmt):
+    """The ISSUE-10 acceptance bar: the paged engine (slots hold only a
+    PageTable, the kernel attends pool slabs through it) emits bitwise the
+    same greedy tokens as the copy-in engine (pages word-copied into a dense
+    slot row) — across n_bits {6, 8, 16} on both kernel backends, with
+    staggered arrivals exercising join-on-decode, growth, and release."""
+    cfg, params = setup
+    monkeypatch.setenv("F2P_BACKEND", backend)
+    pol = FormatPolicy(rules=(PolicyRule("kv/*", fmt, 0),))
+    reqs = _requests(cfg, 6, seed=nbits + 20, stagger=3)
+    base = dict(slots=3, max_seq=32, kv_policy=pol, sync_every=4)
+    paged = BatchedEngine(cfg, BatchedServeConfig(**base), params)
+    assert paged.paged
+    copyin = BatchedEngine(
+        cfg, BatchedServeConfig(paged_decode=False, **base), params)
+    assert not copyin.paged
+    a, b = paged.run(reqs), copyin.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(a[r.uid], b[r.uid])
+    assert paged.stats["pool"]["used"] == 1        # only the dump page
+
+
+def test_paged_defrag_compact_mid_decode(setup):
+    """Pool defrag under live decode: every round, relocate one live slot's
+    pages AND compact the whole pool (dump page first, live tables, parked
+    tables). Whole-word moves must not flip one emitted token."""
+    cfg, params = setup
+    reqs = _requests(cfg, 5, seed=31, stagger=2, max_new=10)
+    eng = BatchedEngine(cfg, BatchedServeConfig(slots=2, max_seq=32,
+                                                sync_every=4,
+                                                defrag_every=1), params)
+    compacts = 0
+    orig = eng.compact_pool
+
+    def chaos_compact():
+        nonlocal compacts
+        live = [s for s, t in enumerate(eng._tables) if t is not None]
+        if live:
+            eng.relocate_slot(live[compacts % len(live)])
+        orig()
+        compacts += 1
+
+    eng.compact_pool = chaos_compact
+    out = eng.run(reqs)
+    assert compacts > 2
+    ref = BatchedEngine(cfg, BatchedServeConfig(slots=2, max_seq=32,
+                                                sync_every=4), params)
+    want = ref.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.uid], want[r.uid])
+    assert eng.stats["pool"]["used"] == 1
+
+
+def test_paged_preempt_evict_readmit_bitwise(setup):
+    """Paged park hands the PageTable itself over (trim -> evict-to-host);
+    readmission adopts restored pages — no dense row anywhere. Tokens stay
+    bitwise equal to the sequential engine through the round trip."""
+    cfg, params = setup
+    rng = np.random.default_rng(17)
+    reqs = [Request(uid=u + 1,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 13))
+                                        ).astype(np.int32),
+                    max_new=16)
+            for u in range(5)]
+    eng = BatchedEngine(cfg, BatchedServeConfig(slots=2, max_seq=32,
+                                                sync_every=4,
+                                                preempt_patience=1), params)
+    assert eng.paged
+    out = eng.run(reqs)
+    assert eng.stats.get("preemptions", 0) > 0
+    assert eng.stats.get("host_evictions", 0) > 0
+    assert eng.stats.get("readmits", 0) > 0
+    assert eng.stats["pool"]["used"] == 1
+    seq = _sequential(cfg, params, reqs, 32)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.uid], seq[r.uid])
+
+
+def test_io_upload_delta_vs_full_bitwise(setup):
+    """The delta-masked boundary upload (only dirty slots overwrite the
+    device vectors) is bitwise-invisible vs re-uploading the full host
+    mirrors every dirty round."""
+    cfg, params = setup
+    reqs = _requests(cfg, 6, seed=23, stagger=3)
+    outs = {}
+    for mode in ("delta", "full"):
+        eng = BatchedEngine(cfg, BatchedServeConfig(slots=3, max_seq=32,
+                                                    sync_every=4,
+                                                    io_upload=mode), params)
+        outs[mode] = eng.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(outs["delta"][r.uid],
+                                      outs["full"][r.uid])
+
+
+def test_slo_scheduler_matches_fifo_outputs_and_bounds_starvation(setup):
+    """Latency-aware admission reorders WHICH request gets a free slot, but
+    per-request outputs are a pure function of the request (exact_cobatch),
+    so every request must still emit its sequential tokens — and the
+    preempt_patience hard floor guarantees nothing starves forever even
+    with the tail-penalty scoring active."""
+    cfg, params = setup
+    rng = np.random.default_rng(29)
+    # heavy pressure: 8 requests with mixed tails onto 2 slots, all visible
+    # at once so the scorer (not arrival order) decides admission
+    reqs = [Request(uid=u + 1,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 13))
+                                        ).astype(np.int32),
+                    max_new=int(rng.integers(4, 16)))
+            for u in range(8)]
+    outs = {}
+    for sched in ("slo", "fifo"):
+        eng = BatchedEngine(cfg, BatchedServeConfig(slots=2, max_seq=32,
+                                                    sync_every=4,
+                                                    scheduler=sched), params)
+        outs[sched] = eng.run(reqs)
+        assert len(outs[sched]) == len(reqs)       # nothing starved
+    seq = _sequential(cfg, params, reqs, 32)
+    for r in reqs:
+        np.testing.assert_array_equal(outs["slo"][r.uid], seq[r.uid])
+        np.testing.assert_array_equal(outs["fifo"][r.uid], seq[r.uid])
+
+
+def test_paged_pool_bytes_page_granular(setup):
+    """With paged decode there is no [slots, max_seq] dense KV mirror: the
+    resident KV footprint is pool_bytes_live_packed — allocated pages only,
+    scaling with live tokens at page granularity."""
+    cfg, params = setup
+    eng = BatchedEngine(cfg, BatchedServeConfig(slots=4, max_seq=32), params)
+    assert eng.paged
+    # decode caches hold the pool slabs themselves, not per-slot dense rows
+    for key in eng.pool.attn_keys:
+        for kv in ("k", "v"):
+            assert eng.caches[key][kv] is eng.pool.slabs[key][kv]
+    s = eng.pool.stats()
+    assert s["pool_bytes_live_packed"] == s["used"] * s["page_bytes_packed"]
+    assert s["used"] == 1                          # just the dump page idle
+    reqs = _requests(cfg, 2, seed=5, max_new=4)
+    eng.run(reqs)
+    assert eng.pool.stats()["used"] == 1           # all request pages freed
